@@ -1,0 +1,369 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Each benchmark prints CSV rows ``name,us_per_call,derived``:
+
+* ``us_per_call`` -- measured wall time of the functional simulator /
+  kernels on this machine (CPU; interpret-mode Pallas);
+* ``derived``     -- the paper-comparable figure from the ZN540-calibrated
+  performance model (MiB/s, seconds, ...), reproducing the paper's trends
+  (the hardware itself is not available here; see DESIGN.md §7).
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us: float, derived: str):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.2f},{derived}", flush=True)
+
+
+def _timeit(fn, n=3):
+    fn()  # warmup
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+# ---------------------------------------------------------------- Fig. 2
+
+def bench_zns_primitives():
+    """Figure 2: Zone Write vs Zone Append vs open zones & request size."""
+    from repro.core import perfmodel as pm
+
+    for size in (4, 8, 16):
+        for zones in (1, 2, 4, 6, 8):
+            zw = pm.zone_write_tput(size, zones)
+            za = pm.zone_append_tput(size, 4, zones)
+            emit(f"fig2/zw_{size}k_z{zones}", 0.0, f"{zw:.1f}MiB/s")
+            emit(f"fig2/za_{size}k_z{zones}", 0.0, f"{za:.1f}MiB/s")
+
+
+# ---------------------------------------------------------------- Exp#1
+
+def bench_write():
+    """Exp#1 (Fig. 6): single-open-segment write performance."""
+    from repro.core import perfmodel as pm
+    from repro.core.array import ZapRaidConfig, ZapRAIDArray
+    from repro.core.zns import ZnsConfig
+
+    rng = np.random.default_rng(0)
+    for chunk_k in (4, 8, 16):
+        za = pm.zapraid_write_perf(k=3, m=1, chunk_kib=chunk_k, group_size=256)
+        zw = pm.zapraid_write_perf(k=3, m=1, chunk_kib=chunk_k, group_size=1,
+                                   use_append=False)
+        zaonly = pm.zapraid_write_perf(k=3, m=1, chunk_kib=chunk_k,
+                                       group_size=1 << 19)
+        # functional-sim wall time for the same pattern (metadata cost)
+        cfg = ZapRaidConfig(scheme="raid5", n_drives=4, group_size=16,
+                            chunk_blocks=1, logical_blocks=512,
+                            gc_free_segments_low=1)
+        zns = ZnsConfig(n_zones=16, zone_cap_blocks=128, block_bytes=256)
+        arr = ZapRAIDArray(cfg, zns)
+        blk = rng.integers(0, 256, (1, 256), dtype=np.uint8)
+
+        def wr():
+            for i in range(32):
+                arr.write(int(rng.integers(0, 512)), blk)
+            arr.flush()
+
+        us = _timeit(wr, n=2)
+        emit(f"exp1/zapraid_{chunk_k}k", us / 32,
+             f"{za.throughput_mib_s:.0f}MiB/s_p50={za.median_lat_us:.0f}us")
+        emit(f"exp1/zwonly_{chunk_k}k", 0.0, f"{zw.throughput_mib_s:.0f}MiB/s")
+        emit(f"exp1/zaonly_{chunk_k}k", 0.0, f"{zaonly.throughput_mib_s:.0f}MiB/s")
+
+
+# ---------------------------------------------------------------- Exp#2
+
+def bench_reads():
+    """Exp#2 (Fig. 7): normal vs degraded reads (functional sim, measured)."""
+    from repro.core.array import ZapRaidConfig, ZapRAIDArray
+    from repro.core import perfmodel as pm
+    from repro.core.zns import ZnsConfig
+
+    rng = np.random.default_rng(1)
+    cfg = ZapRaidConfig(scheme="raid5", n_drives=4, group_size=16,
+                        chunk_blocks=1, logical_blocks=256,
+                        gc_free_segments_low=1)
+    zns = ZnsConfig(n_zones=12, zone_cap_blocks=128, block_bytes=256)
+    arr = ZapRAIDArray(cfg, zns)
+    for lba in range(256):
+        arr.write(lba, rng.integers(0, 256, (1, 256), dtype=np.uint8))
+    arr.flush()
+    lbas = rng.integers(0, 256, 64)
+    us_nr = _timeit(lambda: [arr.read(int(l), 1) for l in lbas]) / 64
+    arr.fail_drive(1)
+    us_dr = _timeit(lambda: [arr.read(int(l), 1) for l in lbas]) / 64
+    emit("exp2/normal_read", us_nr, "paper~82us@4k")
+    emit("exp2/degraded_read_zapraid", us_dr,
+         f"model={pm.degraded_read_latency_us(k=3, chunk_kib=4, group_size=256):.0f}us")
+
+
+# ---------------------------------------------------------------- Exp#3
+
+def bench_group_size():
+    """Exp#3 (Fig. 8): stripe-group size sweep -- write tput + degraded-read
+    latency + CST memory."""
+    from repro.core import perfmodel as pm
+    from repro.core.group_layout import CompactStripeTable
+
+    for g in (4, 16, 64, 256, 1024, 4096):
+        p = pm.zapraid_write_perf(k=3, m=1, chunk_kib=4, group_size=g)
+        d = pm.degraded_read_latency_us(k=3, chunk_kib=4, group_size=g)
+        cst = CompactStripeTable(4, 274366, g)
+        emit(f"exp3/g{g}", 0.0,
+             f"{p.throughput_mib_s:.0f}MiB/s_dr={d:.0f}us_cst={cst.memory_bytes()//1024}KiB")
+
+
+# ---------------------------------------------------------------- Exp#4
+
+def bench_raid_schemes():
+    """Exp#4 (Fig. 9): RAID-0/01/4/5/6 write throughput, ZapRAID vs ZW-only."""
+    from repro.core import perfmodel as pm
+    from repro.core.raid import make_scheme
+
+    for name in ("raid0", "raid01", "raid4", "raid5", "raid6"):
+        s = make_scheme(name, 4)
+        za = pm.zapraid_write_perf(k=s.k, m=s.m, chunk_kib=4, group_size=256)
+        zw = pm.zapraid_write_perf(k=s.k, m=s.m, chunk_kib=4, group_size=1,
+                                   use_append=False)
+        gain = za.throughput_mib_s / zw.throughput_mib_s - 1
+        emit(f"exp4/{name}", 0.0,
+             f"zap={za.throughput_mib_s:.0f}MiB/s_zw={zw.throughput_mib_s:.0f}MiB/s_gain={gain*100:.0f}%")
+
+
+# ---------------------------------------------------------------- Exp#5
+
+def bench_recovery():
+    """Exp#5 (Fig. 10): crash + full-drive recovery vs logical space."""
+    from repro.core import perfmodel as pm
+    from repro.core.array import ZapRaidConfig, ZapRAIDArray
+    from repro.core.recovery import recover_array
+    from repro.core.zns import ZnsConfig
+
+    rng = np.random.default_rng(2)
+    cfg = ZapRaidConfig(scheme="raid5", n_drives=4, group_size=16,
+                        chunk_blocks=1, logical_blocks=256,
+                        gc_free_segments_low=1)
+    zns = ZnsConfig(n_zones=12, zone_cap_blocks=128, block_bytes=256)
+    arr = ZapRAIDArray(cfg, zns)
+    for lba in range(256):
+        arr.write(lba, rng.integers(0, 256, (1, 256), dtype=np.uint8))
+    arr.flush()
+    t0 = time.perf_counter()
+    arr2 = recover_array(arr.drives, cfg, zns)
+    us_cr = (time.perf_counter() - t0) * 1e6
+    blocks_read = arr2.stats.recovery_blocks_read
+    t0 = time.perf_counter()
+    arr2.fail_drive(0)
+    arr2.rebuild_drive(0)
+    us_fr = (time.perf_counter() - t0) * 1e6
+    for gib in (100, 500, 1000):
+        emit(f"exp5/crash_{gib}gib", us_cr,
+             f"model={pm.crash_recovery_time_s(logical_gib=gib, chunk_kib=4):.2f}s")
+        emit(f"exp5/fulldrive_{gib}gib", us_fr,
+             f"model={pm.full_drive_recovery_time_s(logical_gib=gib, k=3, chunk_kib=4):.0f}s")
+    emit("exp5/recovery_blocks_read", 0.0, f"{blocks_read}blocks")
+
+
+# ---------------------------------------------------------------- Exp#7
+
+def bench_hybrid():
+    """Exp#7 (Figs. 12-13): multiple open segments / hybrid management."""
+    from repro.core import perfmodel as pm
+
+    for (ns, nl) in ((4, 0), (3, 1), (2, 2), (1, 3), (0, 4)):
+        for frac_small, wname in ((1.0, "4k"), (0.0, "16k"), (0.75, "mix")):
+            p = pm.hybrid_write_perf(k=3, m=1, cs_kib=8, cl_kib=16,
+                                     n_small=ns, n_large=nl,
+                                     frac_small=frac_small, group_size=256)
+            emit(f"exp7/ns{ns}_nl{nl}_{wname}", 0.0,
+                 f"{p.throughput_mib_s:.0f}MiB/s_p95={p.p95_lat_us:.0f}us")
+
+
+# ---------------------------------------------------------------- Exp#8
+
+def bench_gc():
+    """Exp#8 (Fig. 14): GC overhead vs reserved space (functional WA)."""
+    from repro.core.array import ZapRaidConfig, ZapRAIDArray
+    from repro.core.zns import ZnsConfig
+
+    rng = np.random.default_rng(3)
+    for zones, label in ((6, "tight_20pct"), (8, "mid_50pct"), (12, "ample_100pct")):
+        cfg = ZapRaidConfig(scheme="raid5", n_drives=4, group_size=8,
+                            chunk_blocks=1, logical_blocks=96,
+                            gc_free_segments_low=2)
+        zns = ZnsConfig(n_zones=zones, zone_cap_blocks=64, block_bytes=256)
+        arr = ZapRAIDArray(cfg, zns)
+        t0 = time.perf_counter()
+        for _ in range(1200):
+            arr.write(int(rng.integers(0, 96)),
+                      rng.integers(0, 256, (1, 256), dtype=np.uint8))
+        arr.flush()
+        us = (time.perf_counter() - t0) * 1e6 / 1200
+        emit(f"exp8/{label}", us,
+             f"WA={arr.stats.write_amp():.2f}_gc={arr.stats.gc_runs}")
+
+
+# ---------------------------------------------------------------- Exp#9
+
+def bench_l2p_offload():
+    """Exp#9 (Fig. 15): L2P memory cap sweep (miss/eviction rates)."""
+    from repro.core.array import ZapRaidConfig, ZapRAIDArray
+    from repro.core.zns import ZnsConfig
+
+    rng = np.random.default_rng(4)
+    for limit, label in ((None, "full"), (256, "half"), (128, "quarter")):
+        cfg = ZapRaidConfig(scheme="raid5", n_drives=4, group_size=8,
+                            chunk_blocks=1, logical_blocks=512,
+                            gc_free_segments_low=1,
+                            l2p_memory_limit_entries=limit)
+        zns = ZnsConfig(n_zones=24, zone_cap_blocks=64, block_bytes=256)
+        arr = ZapRAIDArray(cfg, zns)
+        t0 = time.perf_counter()
+        for _ in range(800):
+            arr.write(int(rng.integers(0, 512)),
+                      rng.integers(0, 256, (1, 256), dtype=np.uint8))
+        arr.flush()
+        us = (time.perf_counter() - t0) * 1e6 / 800
+        ev = getattr(arr.l2p, "evictions", 0)
+        emit(f"exp9/{label}", us,
+             f"evictions={ev}_meta_blocks={arr.stats.meta_blocks_written}")
+
+
+# --------------------------------------------------------------- Exp#10
+
+def bench_trace():
+    """Exp#10: cloud-block-storage-like trace (60% <=4K, 25% >=16K writes)."""
+    from repro.core import perfmodel as pm
+    from repro.core.array import ZapRaidConfig, ZapRAIDArray
+    from repro.core.zns import ZnsConfig
+
+    rng = np.random.default_rng(5)
+    cfg = ZapRaidConfig(scheme="raid5", n_drives=4, hybrid=True,
+                        n_small=1, n_large=3, group_size=8,
+                        small_chunk_blocks=1, large_chunk_blocks=2,
+                        logical_blocks=256, gc_free_segments_low=1)
+    zns = ZnsConfig(n_zones=20, zone_cap_blocks=64, block_bytes=256)
+    arr = ZapRAIDArray(cfg, zns)
+    t0 = time.perf_counter()
+    n_ops = 600
+    for _ in range(n_ops):
+        r = rng.random()
+        n = 1 if r < 0.60 else (2 if r < 0.75 else 3)
+        lba = int(rng.integers(0, 256 - n))
+        if rng.random() < 0.85:
+            arr.write(lba, rng.integers(0, 256, (n, 256), dtype=np.uint8))
+        else:
+            arr.read(lba, n)
+    arr.flush()
+    us = (time.perf_counter() - t0) * 1e6 / n_ops
+    zap = pm.hybrid_write_perf(k=3, m=1, cs_kib=8, cl_kib=16, n_small=1,
+                               n_large=3, frac_small=0.75, group_size=256)
+    zw = pm.hybrid_write_perf(k=3, m=1, cs_kib=8, cl_kib=16, n_small=1,
+                              n_large=3, frac_small=0.75, group_size=1)
+    emit("exp10/trace_sim", us,
+         f"zap={zap.throughput_mib_s:.0f}MiB/s_zw={zw.throughput_mib_s:.0f}MiB/s"
+         f"_gain={100*(zap.throughput_mib_s/zw.throughput_mib_s-1):.0f}%")
+
+
+# ------------------------------------------------------------- kernels
+
+def bench_kernels():
+    """Kernel microbenchmarks (interpret mode: correctness-path timing)."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(6)
+    data = jnp.asarray(rng.integers(0, 2**31, (3, 65536), dtype=np.int64), jnp.int32)
+    us = _timeit(lambda: ops.xor_parity(data).block_until_ready())
+    emit("kernels/parity_xor_256KiB", us, f"{3*65536*4/1e3:.0f}KB_in")
+    us = _timeit(lambda: ops.rs_encode(data, 2).block_until_ready())
+    emit("kernels/rs_encode_m2_256KiB", us, "gf256_swar")
+    x = jnp.asarray(rng.standard_normal((4, 512, 64)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.1, (4, 512)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.5, 2, (4,)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((4, 512, 32)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((4, 512, 32)), jnp.float32)
+    us = _timeit(lambda: ops.ssd_chunk_scan(x, dt, a, b, c, chunk=128)[0].block_until_ready())
+    emit("kernels/ssd_scan_4x512", us, "pallas_interpret")
+
+
+# ----------------------------------------------------------- checkpoint
+
+def bench_checkpoint():
+    """Checkpoint engine: save/restore/degraded-restore throughput."""
+    import jax.numpy as jnp
+    from repro.checkpoint.zapraid_ckpt import CheckpointConfig, CheckpointEngine
+
+    rng = np.random.default_rng(7)
+    state = {"w": jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)}
+    nbytes = 256 * 256 * 4
+    eng = CheckpointEngine(
+        CheckpointConfig(n_lanes=4, group_size=8, block_bytes=4096,
+                         zone_cap_blocks=512, n_zones=64, chunk_blocks=2),
+        logical_blocks=1 << 13,
+    )
+    step = [0]
+
+    def save():
+        step[0] += 1
+        eng.save(step[0], state)
+
+    us = _timeit(save, n=2)
+    emit("ckpt/save_256KiB", us, f"{nbytes/us:.1f}MB/s_sim")
+    last = max(eng.catalog)
+    us = _timeit(lambda: eng.restore(last, state), n=2)
+    emit("ckpt/restore_256KiB", us, f"{nbytes/us:.1f}MB/s_sim")
+    eng.fail_lane(1)
+    us = _timeit(lambda: eng.restore(last, state), n=2)
+    emit("ckpt/degraded_restore_256KiB", us, f"{nbytes/us:.1f}MB/s_sim")
+
+
+# ------------------------------------------------------------ straggler
+
+def bench_straggler():
+    """Beyond-paper: group-bounded commit window vs per-step barrier
+    (the paper's G-sweep applied to gradient commits)."""
+    from repro.distributed.elastic import GroupCommitScheduler
+
+    sched = GroupCommitScheduler(n_workers=256, straggle_p=0.03,
+                                 straggle_factor=6.0, seed=1)
+    for g in (1, 4, 16, 64):
+        t0 = time.perf_counter()
+        res = sched.simulate(steps=512, group_size=g)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"straggler/G{g}", us,
+             f"speedup={res.speedup:.3f}_cst_bits={sched.commit_table_bits(g)}")
+
+
+ALL = [
+    bench_zns_primitives, bench_write, bench_reads, bench_group_size,
+    bench_raid_schemes, bench_recovery, bench_hybrid, bench_gc,
+    bench_l2p_offload, bench_trace, bench_kernels, bench_checkpoint,
+    bench_straggler,
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

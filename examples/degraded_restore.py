@@ -1,0 +1,52 @@
+"""Fault-tolerance walkthrough: erasure-coded checkpoints + live state parity.
+
+1. Save a training state into the ZapRAID checkpoint log (RAID-6 across 5
+   lanes: survives any TWO lane losses).
+2. Fail two lanes; restore WITHOUT rebuilding (degraded reads decode).
+3. Crash the host; remount the log from the drives (crash consistency 3.4).
+4. Beyond-paper: erasure-code live optimizer shards across 4 DP ranks and
+   reconstruct a lost rank's shard on-device (no checkpoint read at all).
+
+Run: PYTHONPATH=src python examples/degraded_restore.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.state_parity import encode_shards, reconstruct_shard
+from repro.checkpoint.zapraid_ckpt import CheckpointConfig, CheckpointEngine
+
+rng = np.random.default_rng(0)
+state = {"params": {"w": jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)},
+         "step": jnp.int32(123)}
+
+eng = CheckpointEngine(
+    CheckpointConfig(n_lanes=5, scheme="raid6", group_size=8,
+                     block_bytes=512, zone_cap_blocks=256, n_zones=64,
+                     chunk_blocks=2),
+    logical_blocks=1 << 13,
+)
+eng.save(123, state)
+print("checkpoint saved (RAID-6 over 5 lanes)")
+
+# host crash first (all lanes intact): remount from the log (crash recovery 3.4)
+eng = eng.crash_and_remount()
+print("crash + remount -> catalog recovered:", 123 in eng.catalog)
+
+# now lose TWO lanes and restore without rebuilding (degraded reads decode)
+eng.fail_lane(1)
+eng.fail_lane(3)
+out = eng.restore(123, state)
+ok = np.array_equal(np.asarray(out["params"]["w"]), np.asarray(state["params"]["w"]))
+print(f"two lanes failed -> degraded restore correct: {ok} "
+      f"({eng.array.stats.degraded_reads} degraded reads)")
+
+# --- live optimizer-state parity across DP ranks (beyond-paper) -----------
+k = 4
+shards = [{"m": jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)}
+          for _ in range(k)]
+parity = encode_shards(shards, m=1)
+lost = 2
+rec = reconstruct_shard(lost, {r: shards[r] for r in range(k) if r != lost},
+                        parity, k)
+print("lost DP rank 2's optimizer shard reconstructed on-device:",
+      np.array_equal(np.asarray(rec["m"]), np.asarray(shards[lost]["m"])))

@@ -1,0 +1,312 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Inputs: the SPMD-partitioned HLO text (per-device program) plus
+``compiled.cost_analysis()``.  Outputs the three roofline terms for TPU v5e:
+
+  compute term    = per-device FLOPs / 197 TF/s (bf16)
+  memory term     = per-device HBM bytes / 819 GB/s
+  collective term = per-device wire time over 50 GB/s/link ICI
+
+XLA's HloCostAnalysis does NOT multiply ``while`` bodies by their trip
+counts (a scan-over-layers model would undercount by n_layers), so this
+module re-derives FLOPs and collective bytes directly from the HLO text:
+
+* each computation's *execution multiplier* is propagated through the call
+  graph (while bodies multiply by the loop trip count recovered from the
+  loop condition's comparison constant);
+* FLOPs: every ``dot`` contributes 2 * prod(result_shape) * K (K = product
+  of lhs contracting dim sizes), times its computation's multiplier;
+* collective wire time uses ring costs:
+    all-reduce       2 * B * (S-1)/S
+    all-gather       B_out * (S-1)/S
+    reduce-scatter   B_out * (S-1)
+    all-to-all       B * (S-1)/S
+    collective-permute  B
+  where S is the replica-group size parsed from ``replica_groups``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^\s*%?([\w\.\-]+)\s+\([^)]*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\)?, condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:to_apply|calls|condition|body|branch_computations)=\{?%?([\w\.\-, %]+)\}?")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_DOT_RE = re.compile(r"=\s+(?:\()?\s*(?:pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)\[[\d,]*\][^=]*\bdot\(")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]+)\}")
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclasses.dataclass
+class CollectiveStat:
+    op: str
+    count: int = 0
+    bytes: float = 0.0       # per-device operand bytes (x multipliers)
+    wire_bytes: float = 0.0  # per-device wire traffic (ring model)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops: float                 # per-device, trip-count adjusted
+    hbm_bytes: float             # per-device (cost_analysis or analytic)
+    collective_wire_bytes: float
+    collective_bytes: float
+    collectives: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    cost_analysis_flops: float
+    cost_analysis_bytes: float
+
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    def to_dict(self):
+        d = dataclasses.asdict(self)
+        d["dominant"] = self.dominant()
+        return d
+
+
+def _split_computations(hlo: str) -> tuple[dict[str, list[str]], str]:
+    """Split HLO text into computations.  Headers start at column 0 and end
+    with '{'; the ENTRY computation is tagged.  Returns (comps, entry)."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.rstrip()
+        if not line.startswith((" ", "\t")) and stripped.endswith("{") and "(" in line:
+            name = stripped.split("(")[0].strip()
+            is_entry = name.startswith("ENTRY")
+            name = name.replace("ENTRY", "").strip().lstrip("%").strip()
+            cur = name
+            comps[cur] = []
+            if is_entry:
+                entry = name
+            continue
+        if stripped == "}" or stripped.startswith("} "):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps, entry
+
+
+def _symbol_shapes(lines: list[str]) -> dict[str, list[int]]:
+    """instruction name -> result dims (first shape literal after '=')."""
+    table: dict[str, list[int]] = {}
+    for line in lines:
+        m = re.match(r"\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)", line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        sm = _SHAPE_RE.search(rest.split("(")[0] + "(")
+        sm = _SHAPE_RE.search(rest)
+        if sm:
+            dims = [int(x) for x in sm.group(2).split(",") if x]
+            table[name] = dims or [1]
+    return table
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Heuristic: the largest s32 constant in the loop condition."""
+    best = 1
+    for line in cond_lines:
+        for m in _CONST_RE.finditer(line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _computation_multipliers(
+    comps: dict[str, list[str]], entry: Optional[str]
+) -> dict[str, float]:
+    """Execution count per computation (while bodies x trip counts)."""
+    mult = {name: 0.0 for name in comps}
+    if entry is None or entry not in comps:
+        entry = next(
+            (n for n in comps if n.startswith("main")), next(iter(comps))
+        )
+    mult[entry] = 1.0
+
+    # iterate to fixpoint over the call graph (shallow nesting in practice)
+    for _ in range(12):
+        changed = False
+        new_mult = dict(mult)
+        for name, lines in comps.items():
+            m = mult.get(name, 0.0)
+            if m == 0.0:
+                continue
+            for line in lines:
+                wm = _WHILE_RE.search(line)
+                if wm:
+                    cond, body = wm.group(1), wm.group(2)
+                    trips = _trip_count(comps.get(cond, []))
+                    for target, factor in ((cond, trips + 1), (body, trips)):
+                        want = m * factor
+                        if target in comps and new_mult.get(target, 0.0) < want:
+                            new_mult[target] = want
+                            changed = True
+                    continue
+                for cm in re.finditer(r"(?:to_apply|calls)=\{?%?([\w\.\-]+)", line):
+                    target = cm.group(1)
+                    if target in comps and new_mult.get(target, 0.0) < m:
+                        new_mult[target] = m
+                        changed = True
+                for cm in re.finditer(
+                    r"(?:true_computation|false_computation|branch_computations)=\{?%?([\w\.\-,% ]+)\}?",
+                    line,
+                ):
+                    for t in re.split(r"[,\s%]+", cm.group(1)):
+                        if t in comps and new_mult.get(t, 0.0) < m:
+                            new_mult[t] = m
+                            changed = True
+        mult = new_mult
+        if not changed:
+            break
+    return mult
+
+
+def _dot_flops(line: str, symbols: dict[str, list[int]]) -> float:
+    sm = _SHAPE_RE.search(line)
+    if not sm:
+        return 0.0
+    res = [int(x) for x in sm.group(2).split(",") if x] or [1]
+    # lhs operand: first name inside dot(...)
+    dm = re.search(r"\bdot\(\s*%?([\w\.\-]+)", line)
+    k = 1
+    if dm:
+        lhs = symbols.get(dm.group(1))
+        cm = _CONTRACT_RE.search(line)
+        if lhs and cm:
+            for idx in cm.group(1).split(","):
+                i = int(idx)
+                if i < len(lhs):
+                    k *= lhs[i]
+        elif lhs:
+            k = lhs[-1]  # default contraction on last dim
+    return 2.0 * math.prod(res) * k
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return n_devices
+
+
+def analyze_hlo(
+    hlo: str,
+    *,
+    n_devices: int,
+    cost_analysis: Optional[dict] = None,
+    analytic_hbm_bytes: Optional[float] = None,
+) -> RooflineReport:
+    comps, entry = _split_computations(hlo)
+    mult = _computation_multipliers(comps, entry)
+
+    flops = 0.0
+    colls: dict[str, CollectiveStat] = {}
+    wire_total = 0.0
+    bytes_total = 0.0
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        symbols = _symbol_shapes(lines)
+        for line in lines:
+            if " dot(" in line:
+                flops += m * _dot_flops(line, symbols)
+                continue
+            for op in COLLECTIVES:
+                if f" {op}(" in line or f" {op}-start(" in line or f" {op}-done(" in line:
+                    if f" {op}-done(" in line:
+                        break  # counted at -start
+                    # result shape(s) = everything between '=' and the op name
+                    head = line.split(f"{op}(")[0].split(f"{op}-start(")[0]
+                    head = head.split("=", 1)[-1]
+                    shapes = _SHAPE_RE.findall(head)
+                    b = sum(shape_bytes(dt, dims) for dt, dims in shapes)
+                    s = _group_size(line, n_devices)
+                    if s <= 1:
+                        break
+                    if op == "all-reduce":
+                        wire = 2.0 * b * (s - 1) / s
+                    elif op == "all-gather":
+                        wire = b * (s - 1) / s
+                    elif op == "reduce-scatter":
+                        wire = b * (s - 1)
+                    elif op == "all-to-all":
+                        wire = b * (s - 1) / s
+                    else:  # collective-permute
+                        wire = b
+                    st = colls.setdefault(op, CollectiveStat(op))
+                    st.count += int(m)
+                    st.bytes += m * b
+                    st.wire_bytes += m * wire
+                    wire_total += m * wire
+                    bytes_total += m * b
+                    break
+
+    ca_flops = float(cost_analysis.get("flops", 0.0)) if cost_analysis else 0.0
+    ca_bytes = float(cost_analysis.get("bytes accessed", 0.0)) if cost_analysis else 0.0
+    hbm = max(ca_bytes, analytic_hbm_bytes or 0.0)
+    eff_flops = max(flops, ca_flops)
+    return RooflineReport(
+        flops=eff_flops,
+        hbm_bytes=hbm,
+        collective_wire_bytes=wire_total,
+        collective_bytes=bytes_total,
+        collectives={k: dataclasses.asdict(v) for k, v in colls.items()},
+        compute_s=eff_flops / PEAK_FLOPS,
+        memory_s=hbm / HBM_BW,
+        collective_s=wire_total / LINK_BW,
+        cost_analysis_flops=ca_flops,
+        cost_analysis_bytes=ca_bytes,
+    )
+
+
+def model_flops_per_step(cfg, cell) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = tokens/step.
+
+    For train cells this is fwd+bwd (6ND); prefill is forward-only (2ND);
+    decode is 2*N_active per token."""
+    n_active = cfg.active_param_count()
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    if cell.kind == "train":
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens

@@ -1,0 +1,1006 @@
+"""ZapRAID controller: a log-structured RAID volume over simulated ZNS drives.
+
+Implements the paper end to end:
+
+* log-structured segments over k+m zones with header/data/footer regions
+  (§3.1) and replicated header descriptors;
+* group-based data layout (§3.2): Zone-Append segments commit stripes in
+  groups of G with a *globally shuffled* completion order (modeling device
+  reordering) and record placements in a byte-rounded compact stripe table;
+* hybrid data management (§3.3): small-chunk vs large-chunk open segments,
+  one small segment reserved for Zone Append, write-size threshold C_l;
+* block metadata in OOB + footer, parity-redundant LBA/ts on parity chunks;
+* crash consistency (§3.4): header scan -> partial-stripe discard ->
+  full-stripe rewrite -> L2P/CST rebuild (footers for sealed, OOB scan for
+  open segments), mapping-block-aware L2P recovery;
+* degraded reads (CST group search), full-drive recovery (§3.5);
+* greedy garbage collection with validity bitmaps (§4);
+* L2P offloading with CLOCK eviction into LSB-tagged mapping blocks (§3.1).
+
+The LBA field stored in block metadata is shifted left by one bit: user
+blocks use ``lba << 1`` and mapping blocks ``(gid << 1) | 1`` -- the same
+LSB-discrimination trick as the paper (which relies on 4 KiB alignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import segment as seg_mod
+from repro.core.group_layout import CompactStripeTable
+from repro.core.l2p import NO_PBA, L2PTable, pack_pba, unpack_pba
+from repro.core.raid import StripeCodec, decode_meta, make_scheme, parity_oob
+from repro.core.segment import (
+    SegmentClass,
+    SegmentInfo,
+    SegmentState,
+    pack_footer,
+    pack_header,
+    solve_stripes_per_segment,
+    unpack_footer,
+    unpack_header,
+)
+from repro.core.zns import (
+    INVALID_LBA,
+    OOB_DTYPE,
+    CrashBudget,
+    DeviceCrashed,
+    DriveFailed,
+    SimZnsDrive,
+    ZnsConfig,
+    ZoneState,
+    make_array_drives,
+)
+
+
+@dataclasses.dataclass
+class ZapRaidConfig:
+    scheme: str = "raid5"
+    n_drives: int = 4
+    group_size: int = 256          # G (>=2 => Zone Append; ==1 => Zone Write)
+    chunk_blocks: int = 1          # C in single-class mode
+    logical_blocks: int = 2048
+    # hybrid data management (§3.3); when enabled, single-class fields unused
+    hybrid: bool = False
+    n_small: int = 1               # N_s open small-chunk segments
+    n_large: int = 0               # N_l open large-chunk segments
+    small_chunk_blocks: int = 1    # C_s
+    large_chunk_blocks: int = 4    # C_l (also the write-size threshold)
+    # L2P offloading
+    l2p_memory_limit_entries: Optional[int] = None
+    # GC
+    gc_free_segments_low: int = 1  # trigger GC when free segments/drive < this
+    # datapath
+    use_pallas: bool = False
+    interpret: bool = True
+    append_seed: int = 1234
+
+    def chunk_sizes(self) -> list[tuple[int, int]]:
+        """[(seg_class, chunk_blocks)] for the open-segment classes in use."""
+        if not self.hybrid:
+            return [(int(SegmentClass.SMALL), self.chunk_blocks)]
+        out = []
+        if self.n_small:
+            out.append((int(SegmentClass.SMALL), self.small_chunk_blocks))
+        if self.n_large:
+            out.append((int(SegmentClass.LARGE), self.large_chunk_blocks))
+        return out
+
+
+@dataclasses.dataclass
+class Stats:
+    host_blocks_written: int = 0
+    device_blocks_written: int = 0
+    stripes_committed: int = 0
+    padded_blocks: int = 0
+    reads: int = 0
+    degraded_reads: int = 0
+    cst_entries_accessed: int = 0
+    gc_runs: int = 0
+    gc_blocks_moved: int = 0
+    recovery_blocks_read: int = 0
+    meta_blocks_written: int = 0
+
+    def write_amp(self) -> float:
+        if self.host_blocks_written == 0:
+            return 0.0
+        return self.device_blocks_written / self.host_blocks_written
+
+
+class _InFlightStripe:
+    """Accumulates k*C data blocks before encode+commit (paper §3.1)."""
+
+    def __init__(self, k: int, chunk_blocks: int, block_bytes: int):
+        self.k = k
+        self.c = chunk_blocks
+        self.capacity = k * chunk_blocks
+        self.blocks = np.zeros((self.capacity, block_bytes), dtype=np.uint8)
+        self.lbas = np.full(self.capacity, -1, dtype=np.int64)  # -1 = padding
+        self.ts = np.zeros(self.capacity, dtype=np.uint64)
+        self.fill = 0
+        self.meta_gids = np.full(self.capacity, -1, dtype=np.int64)
+
+    def add(self, lba: int, block: np.ndarray, ts: int, meta_gid: int = -1) -> None:
+        i = self.fill
+        self.blocks[i] = block
+        self.lbas[i] = lba
+        self.ts[i] = ts
+        self.meta_gids[i] = meta_gid
+        self.fill += 1
+
+    @property
+    def full(self) -> bool:
+        return self.fill == self.capacity
+
+    def pad_to_full(self) -> int:
+        pad = self.capacity - self.fill
+        self.fill = self.capacity
+        return pad
+
+
+class _OpenSegment:
+    """Runtime state of one open segment."""
+
+    def __init__(self, info: SegmentInfo, block_bytes: int):
+        self.info = info
+        self.block_bytes = block_bytes
+        n, s, c = info.n_drives, info.n_stripes, info.chunk_blocks
+        self.cst = CompactStripeTable(n, s, info.group_size) if info.uses_append else None
+        # full per-zone metadata buffer (for footer writes at seal time)
+        self.meta = np.zeros((n, s * c), dtype=OOB_DTYPE)
+        self.meta["lba"] = INVALID_LBA
+        self.group_buffer: list[dict] = []  # staged stripes of the current group
+
+    @property
+    def seg_id(self) -> int:
+        return self.info.seg_id
+
+
+class _SegmentRecord:
+    """Controller-side record for any live (open or sealed) segment."""
+
+    def __init__(self, info: SegmentInfo):
+        self.info = info
+        n, s, c = info.n_drives, info.n_stripes, info.chunk_blocks
+        self.valid = np.zeros((n, s * c), dtype=bool)  # data-region validity
+        self.valid_count = 0
+        self.cst: Optional[CompactStripeTable] = None
+
+    def data_capacity(self) -> int:
+        k = self.info.k
+        return self.info.n_stripes * self.info.chunk_blocks * k
+
+
+class ZapRAIDArray:
+    """The user-facing block volume (paper Figure 3)."""
+
+    def __init__(
+        self,
+        cfg: ZapRaidConfig,
+        zns_cfg: ZnsConfig,
+        drives: Optional[list[SimZnsDrive]] = None,
+        *,
+        _recovering: bool = False,
+    ):
+        self.cfg = cfg
+        self.zns_cfg = zns_cfg
+        self.scheme = make_scheme(cfg.scheme, cfg.n_drives)
+        self.codec = StripeCodec(
+            self.scheme, use_pallas=cfg.use_pallas, interpret=cfg.interpret
+        )
+        self.budget = CrashBudget(None)
+        self.drives = drives or make_array_drives(cfg.n_drives, zns_cfg, self.budget)
+        for d in self.drives:
+            d.budget = self.budget
+        self.stats = Stats()
+        self.ts_counter = 1
+        self.next_seg_id = 0
+        self.rng = np.random.default_rng(cfg.append_seed)
+
+        # zone allocation: per-drive free zone list (LIFO)
+        self.free_zones: list[list[int]] = [
+            list(range(zns_cfg.n_zones - 1, -1, -1)) for _ in range(cfg.n_drives)
+        ]
+        self.segments: dict[int, _SegmentRecord] = {}
+        self.open_segments: dict[int, _OpenSegment] = {}
+        # open segment ids by class: small[0] is the Zone-Append one
+        self.small_ids: list[int] = []
+        self.large_ids: list[int] = []
+        self._rr_small = 0
+        self._rr_large = 0
+        self._pending_meta: list[int] = []  # gids awaiting mapping-block write
+        self._meta_staging: dict[int, np.ndarray] = {}  # gid -> entries in flight
+        self._meta_queued_ts: dict[int, int] = {}
+        self._buffered: dict[int, tuple] = {}  # lba -> (stripe, slot), uncommitted
+        self.mapping_table: dict[int, int] = {}  # gid -> pba of mapping block
+
+        self.l2p = L2PTable(
+            cfg.logical_blocks,
+            memory_limit_entries=cfg.l2p_memory_limit_entries,
+            write_mapping_block=self._queue_mapping_block,
+            read_mapping_block=self._read_mapping_block,
+            entries_per_group=zns_cfg.block_bytes // 4,
+        )
+        self._in_flight: dict[int, _InFlightStripe] = {}  # per segment class
+        # Latest committed write-timestamp per LBA / mapping group.  Commits
+        # can complete out of order across segments (a buffered Zone-Append
+        # group lands after a later Zone-Write stripe), so L2P updates are
+        # timestamp-guarded.
+        self._lba_ts = np.zeros(cfg.logical_blocks, dtype=np.uint64)
+        self._gid_ts: dict[int, int] = {}
+
+        if not _recovering:
+            self._open_initial_segments()
+
+    # ------------------------------------------------------------------ util
+
+    def _now(self) -> int:
+        self.ts_counter += 1
+        return self.ts_counter
+
+    def _layout_for(self, chunk_blocks: int) -> tuple[int, int]:
+        return solve_stripes_per_segment(
+            self.zns_cfg.zone_cap_blocks, chunk_blocks, self.zns_cfg.block_bytes
+        )
+
+    def free_segment_count(self) -> int:
+        return min(len(fz) for fz in self.free_zones)
+
+    # -------------------------------------------------------- segment opening
+
+    def _open_initial_segments(self) -> None:
+        if not self.cfg.hybrid:
+            sid = self._open_segment(SegmentClass.SMALL, self.cfg.chunk_blocks,
+                                     self.cfg.group_size)
+            self.small_ids = [sid]
+        else:
+            for i in range(self.cfg.n_small):
+                g = self.cfg.group_size if i == 0 else 1  # only one ZA segment
+                self.small_ids.append(
+                    self._open_segment(SegmentClass.SMALL,
+                                       self.cfg.small_chunk_blocks, g)
+                )
+            for _ in range(self.cfg.n_large):
+                self.large_ids.append(
+                    self._open_segment(SegmentClass.LARGE,
+                                       self.cfg.large_chunk_blocks, 1)
+                )
+
+    def _open_segment(self, seg_class: int, chunk_blocks: int, group_size: int) -> int:
+        for fz in self.free_zones:
+            if not fz:
+                raise RuntimeError("out of free zones; GC required")
+        zone_ids = tuple(fz.pop() for fz in self.free_zones)
+        s, _ = self._layout_for(chunk_blocks)
+        info = SegmentInfo(
+            seg_id=self.next_seg_id,
+            scheme_name=self.scheme.name,
+            k=self.scheme.k,
+            m=self.scheme.m,
+            zone_ids=zone_ids,
+            chunk_blocks=chunk_blocks,
+            group_size=group_size,
+            seg_class=int(seg_class),
+            create_ts=self._now(),
+            n_stripes=s,
+        )
+        self.next_seg_id += 1
+        # write the replicated header chunk to every zone
+        hdr_block = pack_header(info, self.zns_cfg.block_bytes)
+        hdr_chunk = np.zeros((chunk_blocks, self.zns_cfg.block_bytes), np.uint8)
+        hdr_chunk[0] = hdr_block
+        oobs = np.zeros(chunk_blocks, dtype=OOB_DTYPE)
+        oobs["lba"] = INVALID_LBA
+        for d, z in zip(self.drives, zone_ids):
+            d.zone_write(z, 0, hdr_chunk, oobs)
+            self.stats.device_blocks_written += chunk_blocks
+        rec = _SegmentRecord(info)
+        self.segments[info.seg_id] = rec
+        ost = _OpenSegment(info, self.zns_cfg.block_bytes)
+        rec.cst = ost.cst
+        self.open_segments[info.seg_id] = ost
+        return info.seg_id
+
+    # ------------------------------------------------------------- write path
+
+    def write(self, lba: int, data: np.ndarray) -> None:
+        """Write ``data`` (n_blocks x block_bytes uint8) at logical ``lba``."""
+        data = np.asarray(data, dtype=np.uint8)
+        if data.ndim == 1:
+            data = data.reshape(1, -1)
+        n = data.shape[0]
+        assert data.shape[1] == self.zns_cfg.block_bytes
+        assert 0 <= lba and lba + n <= self.cfg.logical_blocks, (lba, n)
+        seg_class = self._classify(n)
+        for i in range(n):
+            self._append_block(seg_class, lba + i, data[i], 0)
+            self.stats.host_blocks_written += 1
+        self.maybe_gc()
+
+    def _classify(self, n_blocks: int) -> int:
+        if not self.cfg.hybrid or not self.large_ids:
+            return int(SegmentClass.SMALL)
+        if not self.small_ids:
+            return int(SegmentClass.LARGE)
+        return (
+            int(SegmentClass.SMALL)
+            if n_blocks < self.cfg.large_chunk_blocks
+            else int(SegmentClass.LARGE)
+        )
+
+    def _chunk_blocks_for(self, seg_class: int) -> int:
+        if not self.cfg.hybrid:
+            return self.cfg.chunk_blocks
+        return (
+            self.cfg.small_chunk_blocks
+            if seg_class == int(SegmentClass.SMALL)
+            else self.cfg.large_chunk_blocks
+        )
+
+    def _append_block(
+        self, seg_class: int, lba: int, block: np.ndarray, ts: int, meta_gid: int = -1
+    ) -> None:
+        # A new write supersedes any still-uncommitted buffered copy of the
+        # same LBA (issue order must win even though commit order differs).
+        if lba >= 0:
+            buf = self._buffered.pop(lba, None)
+            if buf is not None:
+                old_stripe, slot = buf
+                old_stripe.lbas[slot] = -1  # cancel: becomes padding
+        stripe = self._in_flight.get(seg_class)
+        if stripe is None:
+            stripe = _InFlightStripe(
+                self.scheme.k, self._chunk_blocks_for(seg_class),
+                self.zns_cfg.block_bytes,
+            )
+            self._in_flight[seg_class] = stripe
+        if lba >= 0:
+            self._buffered[lba] = (stripe, stripe.fill)
+        stripe.add(lba, block, ts, meta_gid)
+        if stripe.full:
+            self._dispatch_stripe(seg_class)
+
+    def _commit_all_staged(self) -> None:
+        """Pad+commit every in-flight stripe and staged Zone-Append group."""
+        progressed = True
+        while progressed:
+            progressed = False
+            for seg_class, stripe in list(self._in_flight.items()):
+                if stripe.fill > 0:
+                    self.stats.padded_blocks += stripe.pad_to_full()
+                    self._dispatch_stripe(seg_class)
+                    progressed = True
+            for ost in list(self.open_segments.values()):
+                if ost.group_buffer:
+                    self._commit_group(ost)
+                    progressed = True
+
+    def flush(self) -> None:
+        """Timeout path (§3.5): pad partial in-flight stripes and commit, then
+        flush staged Zone-Append groups, then persist pending mapping blocks.
+
+        Mapping blocks are committed only when no user write is in flight and
+        only in metadata-pure stripes: this guarantees a mapping block's
+        content covers every user commit with a smaller timestamp, which is
+        the invariant the crash-recovery freshness comparison relies on."""
+        self._commit_all_staged()
+        while self._pending_meta:
+            self._drain_meta()
+            self._commit_all_staged()
+
+    # -- segment selection (paper §3.3 policy) --------------------------------
+
+    def _select_segment(self, seg_class: int) -> _OpenSegment:
+        if seg_class == int(SegmentClass.LARGE) and self.large_ids:
+            sid = self.large_ids[self._rr_large % len(self.large_ids)]
+            self._rr_large += 1
+            return self.open_segments[sid]
+        ids = self.small_ids
+        if len(ids) == 1:
+            return self.open_segments[ids[0]]
+        # N_s > 1: round-robin the Zone-Write segments, spill to the reserved
+        # Zone-Append segment every cycle (models "no idle ZW segment").
+        ring = ids[1:] + ids[:1]
+        sid = ring[self._rr_small % len(ring)]
+        self._rr_small += 1
+        return self.open_segments[sid]
+
+    def _dispatch_stripe(self, seg_class: int) -> None:
+        stripe = self._in_flight.pop(seg_class)
+        ost = self._select_segment(seg_class)
+        if ost.info.uses_append:
+            # stage the RAW stripe; parity encode + timestamping happen at
+            # group-commit time so on-disk timestamps reflect commit order.
+            ost.group_buffer.append(stripe)
+            gsz = ost.info.group_size
+            staged = ost.info.stripes_written + len(ost.group_buffer)
+            if staged % gsz == 0 or staged == ost.info.n_stripes:
+                self._commit_group(ost)
+        else:
+            built = self._build_stripe(ost, stripe, ost.info.stripes_written)
+            self._commit_zone_write(ost, built)
+        self._maybe_seal(ost)
+
+    # -- stripe construction ---------------------------------------------------
+
+    def _build_stripe(
+        self, ost: _OpenSegment, stripe: _InFlightStripe, stripe_seq: int
+    ) -> dict:
+        """Encode parity; return a commit-ready stripe dict (not yet placed).
+
+        Block timestamps are (re)assigned here -- i.e., at commit time -- so
+        the on-disk timestamp order equals the commit order; superseded
+        buffered copies were already cancelled in ``_append_block``."""
+        info = ost.info
+        k, m, c = info.k, info.m, info.chunk_blocks
+        bb = self.zns_cfg.block_bytes
+        commit_ts = self._now()
+        stripe.ts[:] = commit_ts
+        for slot in range(stripe.capacity):
+            lba = int(stripe.lbas[slot])
+            if lba >= 0:
+                buf = self._buffered.get(lba)
+                if buf is not None and buf[0] is stripe and buf[1] == slot:
+                    del self._buffered[lba]
+        data = stripe.blocks.reshape(k, c * bb)
+        parity = self.codec.encode_np(data).reshape(m, c, bb) if m else np.zeros(
+            (0, c, bb), np.uint8
+        )
+        meta_mask = stripe.meta_gids >= 0
+        pad_mask = (stripe.lbas < 0) & ~meta_mask
+        lba_fields = np.empty(stripe.capacity, dtype=np.uint64)
+        lba_fields[meta_mask] = (
+            stripe.meta_gids[meta_mask].astype(np.uint64) << np.uint64(1)
+        ) | np.uint64(1)
+        lba_fields[pad_mask] = INVALID_LBA
+        user_mask = ~meta_mask & ~pad_mask
+        lba_fields[user_mask] = stripe.lbas[user_mask].astype(np.uint64) << np.uint64(1)
+        data_oob = np.zeros((k, c), dtype=OOB_DTYPE)
+        data_oob["lba"] = lba_fields.reshape(k, c)
+        data_oob["ts"] = stripe.ts.reshape(k, c)
+        data_oob["stripe"] = stripe_seq
+        if m:
+            p_lba, p_ts = parity_oob(
+                self.codec, data_oob["lba"], data_oob["ts"]
+            )
+            par_oob = np.zeros((m, c), dtype=OOB_DTYPE)
+            par_oob["lba"] = p_lba
+            par_oob["ts"] = p_ts
+            par_oob["stripe"] = stripe_seq
+        else:
+            par_oob = np.zeros((0, c), dtype=OOB_DTYPE)
+        return {
+            "seq": stripe_seq,
+            "data": stripe.blocks.reshape(k, c, bb),
+            "parity": parity,
+            "data_oob": data_oob,
+            "par_oob": par_oob,
+            "lbas": stripe.lbas.reshape(k, c),
+            "ts": stripe.ts.reshape(k, c),
+            "meta_gids": stripe.meta_gids.reshape(k, c),
+        }
+
+    def _role_payload(self, built: dict, role: int):
+        k = built["data"].shape[0]
+        if role < k:
+            return built["data"][role], built["data_oob"][role]
+        return built["parity"][role - k], built["par_oob"][role - k]
+
+    # -- commit paths -----------------------------------------------------------
+
+    def _commit_zone_write(self, ost: _OpenSegment, built: dict) -> None:
+        """Ordered Zone Write commit: every chunk lands at the static offset."""
+        info = ost.info
+        c = info.chunk_blocks
+        seq = built["seq"]
+        off = info.data_start() + seq * c
+        for drive_idx in range(info.n_drives):
+            role = self.scheme.drive_to_role(drive_idx, seq)
+            payload, oobs = self._role_payload(built, role)
+            zone = info.zone_ids[drive_idx]
+            self.drives[drive_idx].zone_write(zone, off, payload, oobs)
+            self.stats.device_blocks_written += c
+            ost.meta[drive_idx, off - c : off] = oobs  # data-region index = off - C
+        info.stripes_written += 1
+        self.stats.stripes_committed += 1
+        self._finish_stripe_bookkeeping(ost, built, {d: off for d in range(info.n_drives)})
+
+    def _commit_group(self, ost: _OpenSegment) -> None:
+        """Zone-Append group commit with globally shuffled completion order."""
+        info = ost.info
+        c = info.chunk_blocks
+        if not ost.group_buffer:
+            return
+        staged = [
+            self._build_stripe(ost, raw, info.stripes_written + i)
+            for i, raw in enumerate(ost.group_buffer)
+        ]
+        group_idx = staged[0]["seq"] // info.group_size
+        ops = []
+        for s_i, built in enumerate(staged):
+            for drive_idx in range(info.n_drives):
+                ops.append((s_i, drive_idx))
+        order = self.rng.permutation(len(ops))
+        offsets: dict[tuple[int, int], int] = {}
+        crashed = None
+        for oi in order:
+            s_i, drive_idx = ops[oi]
+            built = staged[s_i]
+            role = self.scheme.drive_to_role(drive_idx, built["seq"])
+            payload, oobs = self._role_payload(built, role)
+            zone = info.zone_ids[drive_idx]
+            try:
+                off = self.drives[drive_idx].zone_append_commit(zone, payload, oobs)
+            except DeviceCrashed as e:
+                crashed = e
+                break
+            offsets[(s_i, drive_idx)] = off
+            self.stats.device_blocks_written += c
+            ost.meta[drive_idx, off - c : off + 0] = oobs
+        if crashed is not None:
+            ost.group_buffer = []
+            raise crashed
+        # all appends of the group persisted -> record CST, L2P, ack
+        for s_i, built in enumerate(staged):
+            per_drive_off = {d: offsets[(s_i, d)] for d in range(info.n_drives)}
+            for drive_idx, off in per_drive_off.items():
+                chunk_idx = (off - info.data_start()) // c
+                ost.cst.record(drive_idx, chunk_idx, built["seq"] % info.group_size)
+            info.stripes_written += 1
+            self.stats.stripes_committed += 1
+            self._finish_stripe_bookkeeping(ost, built, per_drive_off)
+        ost.group_buffer = []
+
+    def _finish_stripe_bookkeeping(
+        self, ost: _OpenSegment, built: dict, per_drive_off: dict[int, int]
+    ) -> None:
+        """Post-persist: update L2P / mapping table / validity, ack writes."""
+        info = ost.info
+        rec = self.segments[info.seg_id]
+        k, c = info.k, info.chunk_blocks
+        seq = built["seq"]
+        for role in range(k):
+            drive_idx = self.scheme.role_to_drive(role, seq)
+            off = per_drive_off[drive_idx]
+            for b in range(c):
+                lba = int(built["lbas"][role, b])
+                gid = int(built["meta_gids"][role, b])
+                ts = int(built["ts"][role, b]) if "ts" in built else 0
+                blk_off = off + b
+                pba = pack_pba(info.seg_id, drive_idx, blk_off)
+                didx = blk_off - info.data_start()
+                if gid >= 0:  # mapping block
+                    if ts < self._gid_ts.get(gid, 0):
+                        continue  # a newer mapping block already committed
+                    self._gid_ts[gid] = ts
+                    old = self.mapping_table.get(gid, int(NO_PBA))
+                    if old != int(NO_PBA):
+                        self._invalidate(old)
+                    self.mapping_table[gid] = pba
+                    if self._meta_queued_ts.get(gid) == ts:
+                        self._meta_staging.pop(gid, None)  # durable now
+                    rec.valid[drive_idx, didx] = True
+                    rec.valid_count += 1
+                elif lba >= 0:  # user block
+                    if ts < int(self._lba_ts[lba]):
+                        continue  # stale at birth: a newer write already won
+                    self._lba_ts[lba] = ts
+                    old = self.l2p.get(lba)
+                    if old != int(NO_PBA):
+                        self._invalidate(old)
+                    self.l2p.set(lba, pba)
+                    rec.valid[drive_idx, didx] = True
+                    rec.valid_count += 1
+
+    def _invalidate(self, pba: int) -> None:
+        seg_id, drive, off = unpack_pba(pba)
+        rec = self.segments.get(seg_id)
+        if rec is None:
+            return
+        didx = off - rec.info.data_start()
+        if 0 <= didx < rec.valid.shape[1] and rec.valid[drive, didx]:
+            rec.valid[drive, didx] = False
+            rec.valid_count -= 1
+
+    # -- sealing -----------------------------------------------------------------
+
+    def _maybe_seal(self, ost: _OpenSegment) -> None:
+        info = ost.info
+        if info.stripes_written < info.n_stripes:
+            return
+        if ost.group_buffer:
+            self._commit_group(ost)
+        self._seal_segment(ost)
+
+    def _seal_segment(self, ost: _OpenSegment) -> None:
+        """Write footer regions (per-zone own metadata) and finish zones.
+
+        Footer serialization is deterministic, so a partially-written footer
+        (crash mid-seal) is resumed from the zone's write pointer: the
+        already-persisted prefix is identical by construction (§3.4).
+        """
+        info = ost.info
+        footer_start = info.data_start() + info.n_stripes * info.chunk_blocks
+        for drive_idx in range(info.n_drives):
+            zone = info.zone_ids[drive_idx]
+            foot = pack_footer(ost.meta[drive_idx], self.zns_cfg.block_bytes)
+            wp = int(self.drives[drive_idx].wp[zone])
+            skip = wp - footer_start
+            assert 0 <= skip <= foot.shape[0], (wp, footer_start, foot.shape)
+            if skip < foot.shape[0]:
+                rest = foot[skip:]
+                oobs = np.zeros(rest.shape[0], dtype=OOB_DTYPE)
+                oobs["lba"] = INVALID_LBA
+                self.drives[drive_idx].zone_write(zone, wp, rest, oobs)
+                self.stats.device_blocks_written += rest.shape[0]
+            self.drives[drive_idx].finish_zone(zone)
+        info.state = int(SegmentState.SEALED)
+        del self.open_segments[info.seg_id]
+        # replace the open-segment slot with a fresh segment of the same class
+        if info.seg_id in self.small_ids:
+            i = self.small_ids.index(info.seg_id)
+            self.small_ids[i] = self._open_segment(
+                SegmentClass(info.seg_class), info.chunk_blocks, info.group_size
+            )
+        elif info.seg_id in self.large_ids:
+            i = self.large_ids.index(info.seg_id)
+            self.large_ids[i] = self._open_segment(
+                SegmentClass(info.seg_class), info.chunk_blocks, info.group_size
+            )
+
+    # ------------------------------------------------------------------ reads
+
+    def read(self, lba: int, n_blocks: int = 1) -> np.ndarray:
+        out = np.zeros((n_blocks, self.zns_cfg.block_bytes), dtype=np.uint8)
+        for i in range(n_blocks):
+            out[i] = self._read_block(lba + i)
+        self.stats.reads += n_blocks
+        return out
+
+    def _read_block(self, lba: int) -> np.ndarray:
+        pba = self.l2p.get(lba)
+        if pba == int(NO_PBA):
+            return np.zeros(self.zns_cfg.block_bytes, dtype=np.uint8)
+        return self._read_pba(pba)
+
+    def _read_pba(self, pba: int) -> np.ndarray:
+        seg_id, drive_idx, off = unpack_pba(pba)
+        try:
+            return self.drives[drive_idx].read(
+                self.segments[seg_id].info.zone_ids[drive_idx], off, 1
+            )[0].copy()
+        except DriveFailed:
+            return self._degraded_read(seg_id, drive_idx, off)
+
+    # -- degraded read (§3.5) -------------------------------------------------
+
+    def _degraded_read(self, seg_id: int, failed_drive: int, off: int) -> np.ndarray:
+        self.stats.degraded_reads += 1
+        rec = self.segments[seg_id]
+        info = rec.info
+        c = info.chunk_blocks
+        didx = off - info.data_start()
+        chunk_idx = didx // c
+        blk_in_chunk = didx % c
+        chunk = self._reconstruct_chunk(rec, failed_drive, chunk_idx)
+        return chunk[blk_in_chunk]
+
+    def _reconstruct_chunk(
+        self, rec: _SegmentRecord, failed_drive: int, chunk_idx: int
+    ) -> np.ndarray:
+        """Decode the chunk at (failed_drive, chunk_idx) from survivors."""
+        info = rec.info
+        c = info.chunk_blocks
+        bb = self.zns_cfg.block_bytes
+        if info.uses_append:
+            cst = rec.cst
+            assert cst is not None, "CST missing for append segment"
+            sid = cst.stripe_id_at(failed_drive, chunk_idx)
+            group_idx = chunk_idx // info.group_size
+            seq = group_idx * info.group_size + sid
+            member_chunks = {}
+            for d in range(info.n_drives):
+                if d == failed_drive or self.drives[d].failed:
+                    continue
+                hit = cst.find_in_group(d, group_idx, sid)
+                if hit is not None:
+                    member_chunks[d] = hit
+            self.stats.cst_entries_accessed = cst.entries_accessed
+        else:
+            seq = chunk_idx
+            member_chunks = {
+                d: chunk_idx
+                for d in range(info.n_drives)
+                if d != failed_drive and not self.drives[d].failed
+            }
+        lost_role = self.scheme.drive_to_role(failed_drive, seq)
+        if self.scheme.mirror:
+            # read the surviving twin copy directly
+            twin = (lost_role + self.scheme.k) % (2 * self.scheme.k)
+            for d, cidx in member_chunks.items():
+                if self.scheme.drive_to_role(d, seq) == twin:
+                    zone = info.zone_ids[d]
+                    return self.drives[d].read(
+                        zone, info.data_start() + cidx * c, c
+                    ).copy()
+            raise RuntimeError("mirror copy also lost")
+        rows, roles = [], []
+        for d, cidx in member_chunks.items():
+            if len(rows) == self.scheme.k:
+                break
+            zone = info.zone_ids[d]
+            off0 = info.data_start() + cidx * c
+            rows.append(self.drives[d].read(zone, off0, c).reshape(c * bb))
+            roles.append(self.scheme.drive_to_role(d, seq))
+        if len(rows) < self.scheme.k:
+            raise RuntimeError("not enough surviving chunks to decode")
+        data = self.codec.decode_np(np.stack(rows), tuple(roles)).reshape(
+            self.scheme.k, c, bb
+        )
+        if lost_role < self.scheme.k:
+            return data[lost_role]
+        # lost chunk was parity: re-encode
+        par = self.codec.encode_np(data.reshape(self.scheme.k, c * bb))
+        return par.reshape(self.scheme.m, c, bb)[lost_role - self.scheme.k]
+
+    # ------------------------------------------------------- L2P offload plumbing
+
+    def _queue_mapping_block(self, gid: int, entries: np.ndarray) -> None:
+        # Staged until the mapping block is durably committed: fault-ins of
+        # this group must see the staged entries, not the stale on-SSD block.
+        self._meta_staging[gid] = entries.copy()
+        self._pending_meta.append(gid)
+
+    def _drain_meta(self) -> None:
+        while self._pending_meta:
+            gid = self._pending_meta.pop(0)
+            if self.l2p.offload and gid in self.l2p.resident:
+                # the group was faulted back in after eviction: the resident
+                # copy is the freshest image -- serialize that one, and clear
+                # its dirty bit (the on-SSD block is now current).
+                entries = self.l2p.resident[gid].copy()
+                self.l2p.dirty.discard(gid)
+                self._meta_staging[gid] = entries
+            else:
+                entries = self._meta_staging.get(gid)
+            if entries is None:
+                continue  # superseded (faulted back in and re-evicted)
+            block = self._serialize_mapping(entries)
+            ts = self._now()
+            self._meta_queued_ts[gid] = ts
+            self._append_block(self._classify(1), -1, block, ts, meta_gid=gid)
+            self.stats.meta_blocks_written += 1
+
+    def _serialize_mapping(self, entries: np.ndarray) -> np.ndarray:
+        """Pack int64 PBAs into 32-bit on-disk entries (seg<<20|drive<<16|off)."""
+        out = np.full(self.zns_cfg.block_bytes // 4, 0xFFFFFFFF, dtype=np.uint32)
+        for i, pba in enumerate(entries):
+            pba = int(pba)
+            if pba == int(NO_PBA):
+                continue
+            seg, drive, off = unpack_pba(pba)
+            assert seg < (1 << 12) and drive < 16 and off < (1 << 16), (
+                "array too large for 32-bit mapping entries"
+            )
+            out[i] = (seg << 20) | (drive << 16) | off
+        return out.view(np.uint8)
+
+    def _deserialize_mapping(self, block: np.ndarray) -> np.ndarray:
+        raw = block.view(np.uint32)
+        out = np.full(raw.shape[0], NO_PBA, dtype=np.int64)
+        live = raw != 0xFFFFFFFF
+        seg = (raw[live] >> 20).astype(np.int64)
+        drive = ((raw[live] >> 16) & 0xF).astype(np.int64)
+        off = (raw[live] & 0xFFFF).astype(np.int64)
+        out[live] = (seg << 40) | (drive << 32) | off
+        return out
+
+    def _read_mapping_block(self, gid: int) -> Optional[np.ndarray]:
+        staged = self._meta_staging.get(gid)
+        if staged is not None:
+            return staged.copy()  # evicted but not yet durable
+        pba = self.mapping_table.get(gid)
+        if pba is None:
+            return None
+        block = self._read_pba(pba)
+        return self._deserialize_mapping(block)
+
+    # -------------------------------------------------------------------- GC
+
+    def maybe_gc(self) -> None:
+        while self.free_segment_count() < self.cfg.gc_free_segments_low:
+            if not self.gc_once():
+                break
+
+    def gc_once(self) -> bool:
+        """Greedy GC (§4): clean the sealed segment with the most stale blocks."""
+        candidates = [
+            r for r in self.segments.values()
+            if r.info.state == int(SegmentState.SEALED)
+        ]
+        if not candidates:
+            return False
+        rec = min(candidates, key=lambda r: r.valid_count)
+        if rec.valid_count >= rec.data_capacity():
+            return False  # nothing stale anywhere
+        self.stats.gc_runs += 1
+        info = rec.info
+        c = info.chunk_blocks
+        bb = self.zns_cfg.block_bytes
+        # collect valid blocks (LBAs from OOB / footer metadata)
+        moves: list[tuple[int, np.ndarray]] = []
+        meta_moves: list[tuple[int, np.ndarray]] = []
+        for drive_idx in range(info.n_drives):
+            zone = info.zone_ids[drive_idx]
+            didxs = np.nonzero(rec.valid[drive_idx])[0]
+            for didx in didxs:
+                off = info.data_start() + int(didx)
+                try:
+                    block = self.drives[drive_idx].read(zone, off, 1)[0].copy()
+                    oob = self.drives[drive_idx].read_oob(zone, off, 1)[0]
+                except DriveFailed:
+                    block = self._degraded_read(info.seg_id, drive_idx, off)
+                    oob = self._reconstruct_oob(rec, drive_idx, int(didx) // c)[
+                        int(didx) % c
+                    ]
+                lba_field = int(oob["lba"])
+                if lba_field == int(INVALID_LBA):
+                    continue
+                if lba_field & 1:
+                    meta_moves.append((lba_field >> 1, block))
+                else:
+                    moves.append((lba_field >> 1, block))
+        # rewrites go to a large-chunk segment when hybrid (§3.3)
+        target_class = (
+            int(SegmentClass.LARGE)
+            if (self.cfg.hybrid and self.large_ids)
+            else int(SegmentClass.SMALL)
+        )
+        for lba, block in moves:
+            if lba in self._buffered:
+                continue  # a newer user write is in flight; old copy is dead
+            if self.l2p.get(lba) == int(NO_PBA):
+                continue
+            seg_id, d, off = unpack_pba(self.l2p.get(lba))
+            if seg_id != info.seg_id:
+                continue  # stale by now
+            ts = self._now()
+            self._append_block(target_class, lba, block, ts)
+            self.stats.gc_blocks_moved += 1
+        for gid, block in meta_moves:
+            pba = self.mapping_table.get(gid)
+            if pba is None or unpack_pba(pba)[0] != info.seg_id:
+                continue
+            ts = self._now()
+            self._append_block(target_class, -1, block, ts, meta_gid=gid)
+            self.stats.gc_blocks_moved += 1
+        self.flush()
+        # release the old segment's zones
+        for drive_idx in range(info.n_drives):
+            self.drives[drive_idx].reset_zone(info.zone_ids[drive_idx])
+            self.free_zones[drive_idx].append(info.zone_ids[drive_idx])
+        del self.segments[info.seg_id]
+        return True
+
+    # -------------------------------------------------------------- drive fail
+
+    def fail_drive(self, drive_idx: int) -> None:
+        self.drives[drive_idx].fail()
+
+    def rebuild_drive(self, drive_idx: int) -> None:
+        """Full-drive recovery (§3.5) onto a replacement drive."""
+        self.drives[drive_idx].replace()
+        new = self.drives[drive_idx]
+        for rec in sorted(self.segments.values(), key=lambda r: r.info.seg_id):
+            info = rec.info
+            zone = info.zone_ids[drive_idx]
+            c = info.chunk_blocks
+            bb = self.zns_cfg.block_bytes
+            # how far was this zone written? mirror a surviving zone's shape:
+            # sealed => full layout; open => per-CST/our records
+            hdr_chunk = np.zeros((c, bb), np.uint8)
+            hdr_chunk[0] = pack_header(info, bb)
+            hdr_oob = np.zeros(c, dtype=OOB_DTYPE)
+            hdr_oob["lba"] = INVALID_LBA
+            new.zone_write(zone, 0, hdr_chunk, hdr_oob)
+            ost = self.open_segments.get(info.seg_id)
+            if ost is not None:
+                n_chunks = self._zone_chunk_count(rec, drive_idx)
+            else:
+                n_chunks = info.n_stripes
+            meta = np.zeros(n_chunks * c, dtype=OOB_DTYPE)
+            meta["lba"] = INVALID_LBA
+            for chunk_idx in range(n_chunks):
+                chunk = self._reconstruct_chunk(rec, drive_idx, chunk_idx)
+                oobs = self._reconstruct_oob(rec, drive_idx, chunk_idx)
+                off = info.data_start() + chunk_idx * c
+                new.zone_write(zone, off, chunk, oobs)
+                meta[chunk_idx * c : (chunk_idx + 1) * c] = oobs
+                self.stats.recovery_blocks_read += self.scheme.k * c
+            if ost is not None:
+                ost.meta[drive_idx, : n_chunks * c] = meta
+            if info.state == int(SegmentState.SEALED):
+                foot = pack_footer(meta, bb)
+                foot_oob = np.zeros(foot.shape[0], dtype=OOB_DTYPE)
+                foot_oob["lba"] = INVALID_LBA
+                new.zone_write(zone, int(new.wp[zone]), foot, foot_oob)
+                new.finish_zone(zone)
+
+    def _zone_chunk_count(self, rec: _SegmentRecord, drive_idx: int) -> int:
+        """Chunks committed to (open) segment on this drive = stripes written."""
+        return rec.info.stripes_written
+
+    def _reconstruct_oob(
+        self, rec: _SegmentRecord, failed_drive: int, chunk_idx: int
+    ) -> np.ndarray:
+        """Rebuild the lost chunk's OOB entries from survivors (parity OOB)."""
+        info = rec.info
+        c = info.chunk_blocks
+        if info.uses_append:
+            cst = rec.cst
+            sid = cst.stripe_id_at(failed_drive, chunk_idx)
+            group_idx = chunk_idx // info.group_size
+            seq = group_idx * info.group_size + sid
+            members = {
+                d: cst.find_in_group(d, group_idx, sid)
+                for d in range(info.n_drives)
+                if d != failed_drive and not self.drives[d].failed
+            }
+            members = {d: v for d, v in members.items() if v is not None}
+        else:
+            seq = chunk_idx
+            members = {
+                d: chunk_idx
+                for d in range(info.n_drives)
+                if d != failed_drive and not self.drives[d].failed
+            }
+        lost_role = self.scheme.drive_to_role(failed_drive, seq)
+        out = np.zeros(c, dtype=OOB_DTYPE)
+        out["stripe"] = seq
+        if self.scheme.mirror:
+            # copy OOB from the surviving mirror twin
+            twin = (lost_role + self.scheme.k) % (2 * self.scheme.k)
+            for d, cidx in members.items():
+                if self.scheme.drive_to_role(d, seq) == twin:
+                    zone = info.zone_ids[d]
+                    return self.drives[d].read_oob(
+                        zone, info.data_start() + cidx * c, c
+                    ).copy()
+            raise RuntimeError("mirror OOB lost")
+        # The metadata is protected by the same erasure code as the payload
+        # (parity_oob); gather k surviving (lba, ts) rows and decode.
+        rows_lba, rows_ts, roles = [], [], []
+        for d, cidx in members.items():
+            if len(roles) == self.scheme.k:
+                break
+            zone = info.zone_ids[d]
+            oob = self.drives[d].read_oob(zone, info.data_start() + cidx * c, c)
+            rows_lba.append(oob["lba"].astype(np.uint64))
+            rows_ts.append(oob["ts"].astype(np.uint64))
+            roles.append(self.scheme.drive_to_role(d, seq))
+        data_lba, data_ts = decode_meta(
+            self.codec, np.stack(rows_lba), np.stack(rows_ts), tuple(roles)
+        )
+        if lost_role < self.scheme.k:
+            out["lba"] = data_lba[lost_role]
+            out["ts"] = data_ts[lost_role]
+        else:
+            p_lba, p_ts = parity_oob(self.codec, data_lba, data_ts)
+            out["lba"] = p_lba[lost_role - self.scheme.k]
+            out["ts"] = p_ts[lost_role - self.scheme.k]
+        return out
+
+    # ------------------------------------------------------------ crash + misc
+
+    def arm_crash(self, blocks_from_now: int) -> None:
+        """Next ``blocks_from_now`` block commits succeed; later ones crash."""
+        self.budget.remaining = blocks_from_now
+
+    def disarm_crash(self) -> None:
+        self.budget.remaining = None
+
+    def logical_utilization(self) -> float:
+        live = sum(r.valid_count for r in self.segments.values())
+        return live / max(1, self.cfg.logical_blocks)

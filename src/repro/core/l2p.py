@@ -1,0 +1,173 @@
+"""Logical-to-physical (L2P) table with CLOCK-based offloading (paper §3.1).
+
+The L2P maps each logical block address to a packed PBA
+``(segment id, drive id, zone offset)``.  Two modes:
+
+* fully resident -- one flat int64 array (the paper's default);
+* memory-capped -- entries are grouped into 1024-entry *entry groups*; a
+  CLOCK (second-chance) policy evicts non-recently-used groups into 4 KiB
+  *mapping blocks* written through the normal write path (LSB-tagged LBA
+  field so recovery can tell them from user blocks), with a small in-memory
+  mapping table gid -> PBA.
+
+The table is deliberately storage-backend-agnostic: eviction/refill go
+through two callbacks supplied by the owning array.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+DEFAULT_ENTRIES_PER_GROUP = 1024  # 4-byte entries -> one 4 KiB mapping block
+ENTRIES_PER_GROUP = DEFAULT_ENTRIES_PER_GROUP  # back-compat alias
+NO_PBA = np.int64(-1)
+
+# PBA packing: seg_id << 40 | drive << 32 | offset
+_SEG_SHIFT = 40
+_DRIVE_SHIFT = 32
+_OFF_MASK = (1 << 32) - 1
+_DRIVE_MASK = (1 << 8) - 1
+
+
+def pack_pba(seg_id: int, drive: int, offset: int) -> int:
+    assert 0 <= offset <= _OFF_MASK and 0 <= drive <= _DRIVE_MASK
+    return (seg_id << _SEG_SHIFT) | (drive << _DRIVE_SHIFT) | offset
+
+
+def unpack_pba(pba: int) -> tuple[int, int, int]:
+    pba = int(pba)
+    return pba >> _SEG_SHIFT, (pba >> _DRIVE_SHIFT) & _DRIVE_MASK, pba & _OFF_MASK
+
+
+class L2PTable:
+    def __init__(
+        self,
+        n_blocks: int,
+        *,
+        memory_limit_entries: Optional[int] = None,
+        write_mapping_block: Optional[Callable[[int, np.ndarray], None]] = None,
+        read_mapping_block: Optional[Callable[[int], Optional[np.ndarray]]] = None,
+        entries_per_group: int = DEFAULT_ENTRIES_PER_GROUP,
+    ):
+        self.n_blocks = n_blocks
+        self.epg = entries_per_group
+        self.n_groups = -(-n_blocks // entries_per_group)
+        self.offload = memory_limit_entries is not None
+        self.limit_groups = (
+            max(1, memory_limit_entries // entries_per_group) if self.offload else None
+        )
+        self._write_cb = write_mapping_block
+        self._read_cb = read_mapping_block
+        if not self.offload:
+            self.flat = np.full(n_blocks, NO_PBA, dtype=np.int64)
+        else:
+            self.resident: dict[int, np.ndarray] = {}
+            self.dirty: set[int] = set()
+            self.refbit = np.zeros(self.n_groups, dtype=np.uint8)
+            self.hand = 0
+        # stats
+        self.misses = 0
+        self.evictions = 0
+        self.lookups = 0
+
+    # -- helpers ------------------------------------------------------------
+
+    def _group_of(self, lba: int) -> tuple[int, int]:
+        return lba // self.epg, lba % self.epg
+
+    def _fault_in(self, gid: int) -> np.ndarray:
+        if gid in self.resident:
+            self.refbit[gid] = 1
+            return self.resident[gid]
+        self.misses += 1
+        entries = self._read_cb(gid) if self._read_cb else None
+        if entries is None:
+            entries = np.full(self.epg, NO_PBA, dtype=np.int64)
+        self.resident[gid] = entries
+        self.refbit[gid] = 1
+        self._maybe_evict()
+        return entries
+
+    def _maybe_evict(self) -> None:
+        while len(self.resident) > self.limit_groups:
+            # CLOCK sweep over resident groups in gid order from the hand.
+            gids = sorted(self.resident.keys())
+            n = len(gids)
+            start = 0
+            for i, g in enumerate(gids):
+                if g >= self.hand:
+                    start = i
+                    break
+            for step in range(2 * n + 1):
+                g = gids[(start + step) % n]
+                if self.refbit[g]:
+                    self.refbit[g] = 0
+                    continue
+                self._evict(g)
+                self.hand = gids[(start + step + 1) % n]
+                break
+            else:  # all referenced twice around: evict the hand's group
+                g = gids[start]
+                self._evict(g)
+
+    def _evict(self, gid: int) -> None:
+        entries = self.resident.pop(gid)
+        self.evictions += 1
+        if gid in self.dirty:
+            self.dirty.discard(gid)
+            if self._write_cb is not None:
+                self._write_cb(gid, entries)
+
+    # -- public API ---------------------------------------------------------
+
+    def get(self, lba: int) -> int:
+        self.lookups += 1
+        if not self.offload:
+            return int(self.flat[lba])
+        gid, idx = self._group_of(lba)
+        return int(self._fault_in(gid)[idx])
+
+    def set(self, lba: int, pba: int) -> None:
+        if not self.offload:
+            self.flat[lba] = pba
+            return
+        gid, idx = self._group_of(lba)
+        self._fault_in(gid)[idx] = pba
+        self.dirty.add(gid)
+
+    def compare_and_clear(self, lba: int, pba: int) -> None:
+        """Invalidate the mapping only if it still points at ``pba`` (GC races)."""
+        if self.get(lba) == pba:
+            self.set(lba, int(NO_PBA))
+
+    def flush(self) -> None:
+        """Write back every dirty resident group (used before clean shutdown)."""
+        if not self.offload:
+            return
+        for gid in sorted(self.dirty):
+            if self._write_cb is not None:
+                self._write_cb(gid, self.resident[gid])
+        self.dirty.clear()
+
+    def load_group(self, gid: int, entries: np.ndarray) -> None:
+        """Recovery helper: install a group image."""
+        if not self.offload:
+            lo = gid * self.epg
+            hi = min(lo + self.epg, self.n_blocks)
+            self.flat[lo:hi] = entries[: hi - lo]
+        else:
+            self.resident[gid] = entries.copy()
+            self.refbit[gid] = 1
+            self._maybe_evict()
+
+    def drop_group(self, gid: int) -> None:
+        """Recovery helper: forget a resident group (its mapping block is newer)."""
+        if self.offload:
+            self.resident.pop(gid, None)
+            self.dirty.discard(gid)
+
+    def memory_bytes(self) -> int:
+        if not self.offload:
+            return self.n_blocks * 4  # paper counts 4-byte entries
+        return len(self.resident) * self.epg * 4

@@ -1,0 +1,187 @@
+"""RAID schemes and the stripe codec (encode / decode / placement rotation).
+
+Supports the paper's five schemes (Exp#4): RAID-0, RAID-01, RAID-4, RAID-5,
+RAID-6 on an n-drive array.  The codec operates on int32-packed chunk
+payloads and dispatches to the Pallas kernels (XOR for single parity, GF(256)
+Reed-Solomon for double parity) or their jnp oracles.
+
+Placement: role r of a stripe lives on drive ``(r + rot) % n`` where
+``rot = stripe_seq % n`` for rotating schemes (RAID-5/6) and ``rot = 0`` for
+fixed-parity schemes (RAID-0/01/4) -- the classic left-symmetric rotation the
+paper sketches in Figure 3.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gf
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class RaidScheme:
+    name: str
+    k: int  # data chunks per stripe
+    m: int  # parity chunks per stripe
+    rotate: bool  # rotate parity placement across drives
+    mirror: bool = False  # RAID-01: parity chunks are copies of data chunks
+
+    @property
+    def n(self) -> int:
+        return self.k + self.m
+
+    def rotation(self, stripe_seq: int) -> int:
+        return stripe_seq % self.n if self.rotate else 0
+
+    def role_to_drive(self, role: int, stripe_seq: int) -> int:
+        return (role + self.rotation(stripe_seq)) % self.n
+
+    def drive_to_role(self, drive: int, stripe_seq: int) -> int:
+        return (drive - self.rotation(stripe_seq)) % self.n
+
+
+def make_scheme(name: str, n_drives: int) -> RaidScheme:
+    name = name.lower()
+    if name == "raid0":
+        return RaidScheme("raid0", n_drives, 0, rotate=False)
+    if name == "raid01":
+        if n_drives % 2:
+            raise ValueError("raid01 needs an even drive count")
+        return RaidScheme("raid01", n_drives // 2, n_drives // 2, rotate=False, mirror=True)
+    if name == "raid4":
+        return RaidScheme("raid4", n_drives - 1, 1, rotate=False)
+    if name == "raid5":
+        return RaidScheme("raid5", n_drives - 1, 1, rotate=True)
+    if name == "raid6":
+        return RaidScheme("raid6", n_drives - 2, 2, rotate=True)
+    raise ValueError(f"unknown RAID scheme {name!r}")
+
+
+class StripeCodec:
+    """Encode/decode stripes for a scheme, via Pallas kernels or oracles."""
+
+    def __init__(self, scheme: RaidScheme, *, use_pallas: bool = False, interpret: bool = True):
+        self.scheme = scheme
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+
+    # data: (k, n_i32) int32 packed chunk payloads
+    def encode(self, data_i32: jnp.ndarray) -> jnp.ndarray:
+        """Return (m, n_i32) parity chunks (empty for RAID-0)."""
+        s = self.scheme
+        assert data_i32.shape[0] == s.k, (data_i32.shape, s)
+        if s.m == 0:
+            return jnp.zeros((0, data_i32.shape[1]), jnp.int32)
+        if s.mirror:
+            return data_i32
+        if s.m == 1:
+            p = ops.xor_parity(
+                data_i32, use_pallas=self.use_pallas, interpret=self.interpret
+            )
+            return p[None, :]
+        return ops.rs_encode(
+            data_i32, s.m, use_pallas=self.use_pallas, interpret=self.interpret
+        )
+
+    def decode(
+        self, surviving_i32: jnp.ndarray, surviving_roles: tuple[int, ...]
+    ) -> jnp.ndarray:
+        """Reconstruct all k data chunks from k surviving codeword rows."""
+        s = self.scheme
+        if s.m == 0:
+            raise ValueError("RAID-0 cannot decode lost chunks")
+        if s.mirror:
+            # role r and role r+k are copies; pick whichever survived.
+            out = {}
+            for row, role in zip(surviving_i32, surviving_roles):
+                out.setdefault(role % s.k, row)
+            if len(out) < s.k:
+                raise ValueError("RAID-01: both copies of a chunk lost")
+            return jnp.stack([out[i] for i in range(s.k)], axis=0)
+        roles = tuple(surviving_roles)
+        if len(roles) != s.k:
+            raise ValueError(f"need exactly k={s.k} surviving rows, got {len(roles)}")
+        if set(roles) == set(range(s.k)):
+            # all data roles survive (possibly permuted): just reorder.
+            order = [roles.index(i) for i in range(s.k)]
+            return surviving_i32[jnp.array(order)]
+        if s.m == 1:
+            # Single parity: lost data chunk = XOR of the survivors.
+            lost = set(range(s.k)) - set(roles)
+            assert len(lost) == 1
+            lost_role = lost.pop()
+            rec = ops.xor_parity(
+                surviving_i32, use_pallas=self.use_pallas, interpret=self.interpret
+            )
+            rows = {role: surviving_i32[i] for i, role in enumerate(roles) if role < s.k}
+            rows[lost_role] = rec
+            return jnp.stack([rows[i] for i in range(s.k)], axis=0)
+        return ops.rs_decode(
+            surviving_i32, roles, s.k, s.m,
+            use_pallas=self.use_pallas, interpret=self.interpret,
+        )
+
+    def decode_np(self, surviving: np.ndarray, surviving_roles: tuple[int, ...]) -> np.ndarray:
+        """Byte-level convenience wrapper (uint8 in/out) used by recovery paths."""
+        packed = ops.pack_bytes(jnp.asarray(surviving))
+        out = self.decode(packed, surviving_roles)
+        return np.asarray(ops.unpack_bytes(out))
+
+    def encode_np(self, data: np.ndarray) -> np.ndarray:
+        packed = ops.pack_bytes(jnp.asarray(data))
+        out = self.encode(packed)
+        return np.asarray(ops.unpack_bytes(out)).reshape(self.scheme.m, -1) if self.scheme.m else np.zeros((0, data.shape[1]), np.uint8)
+
+
+def _meta_rows(lbas: np.ndarray, ts: np.ndarray) -> np.ndarray:
+    """(rows, c) u64 LBAs + (rows, c) u64 timestamps -> (rows, 16c) bytes."""
+    rows = lbas.shape[0]
+    return np.concatenate(
+        [
+            np.ascontiguousarray(lbas.astype(np.uint64)).view(np.uint8).reshape(rows, -1),
+            np.ascontiguousarray(ts.astype(np.uint64)).view(np.uint8).reshape(rows, -1),
+        ],
+        axis=1,
+    )
+
+
+def _meta_unrows(raw: np.ndarray, c: int) -> tuple[np.ndarray, np.ndarray]:
+    rows = raw.shape[0]
+    lbas = np.ascontiguousarray(raw[:, : 8 * c]).view(np.uint64).reshape(rows, c)
+    ts = np.ascontiguousarray(raw[:, 8 * c :]).view(np.uint64).reshape(rows, c)
+    return lbas, ts
+
+
+def parity_oob(
+    codec: "StripeCodec", data_lbas: np.ndarray, data_ts: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Paper §3.1: parity blocks carry parity-based redundancy of the data
+    blocks' LBAs and timestamps (the stripe id is replicated separately).
+
+    We encode the metadata with the *same* erasure code as the payload, so
+    metadata survives exactly the failures the payload survives (XOR for
+    m=1, RS for m=2, copies for mirrors)."""
+    c = data_lbas.shape[1]
+    rows = _meta_rows(data_lbas, data_ts)
+    enc = codec.encode_np(rows)
+    return _meta_unrows(enc, c)
+
+
+def decode_meta(
+    codec: "StripeCodec",
+    surviving_lbas: np.ndarray,
+    surviving_ts: np.ndarray,
+    surviving_roles: tuple[int, ...],
+) -> tuple[np.ndarray, np.ndarray]:
+    """Reconstruct all k data rows' (lba, ts) metadata from k survivors."""
+    c = surviving_lbas.shape[1]
+    rows = _meta_rows(surviving_lbas, surviving_ts)
+    dec = codec.decode_np(rows, surviving_roles)
+    return _meta_unrows(dec.reshape(codec.scheme.k, -1), c)
+
+
+def gf_coeff_matrix(k: int, m: int) -> np.ndarray:
+    return gf.rs_parity_matrix(k, m)

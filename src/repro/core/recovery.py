@@ -1,0 +1,392 @@
+"""Crash recovery (paper §3.4).
+
+``recover_array(drives, cfg, zns_cfg)`` rebuilds a consistent ZapRAIDArray
+from the persistent state of the drives after a crash, in the paper's order:
+
+1. **Segment table** -- scan zone headers; a segment is valid iff every one
+   of its zones has at least the header persisted (Case 1); segments with
+   any missing-header zone are discarded and their zones reset (Case 2).
+2. **Stripes** -- for every open segment, count persisted chunks per stripe
+   id (OOB scan); stripes with fewer than k+m chunks are *partial*.  A
+   segment holding partial stripes is *dirty*: its fully-persisted winning
+   blocks are rewritten into a fresh segment and the old zones reclaimed
+   (ZNS cannot patch in place).  Data-complete-but-unfooted segments get
+   their footer recomputed and are sealed.
+3. **L2P + CST** -- sealed segments replay their footers (fast path), open
+   segments their OOB areas; the latest write-timestamp wins per LBA.
+   Mapping blocks (LSB-tagged LBA field) feed a temporary table; entry
+   groups whose mapping block is newer than every user entry in the group
+   stay offloaded on the SSD (paper §3.1/§3.4).
+
+Because writes are acknowledged only after the whole stripe persists,
+discarding partial stripes never loses acknowledged data.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.array import ZapRaidConfig, ZapRAIDArray, _OpenSegment, _SegmentRecord
+from repro.core.group_layout import CompactStripeTable
+from repro.core.l2p import NO_PBA, pack_pba, unpack_pba
+from repro.core.segment import (
+    SegmentClass,
+    SegmentInfo,
+    SegmentState,
+    solve_stripes_per_segment,
+    unpack_footer,
+    unpack_header,
+)
+from repro.core.zns import INVALID_LBA, SimZnsDrive, ZnsConfig, ZoneState
+
+
+@dataclasses.dataclass
+class _FoundSegment:
+    info: SegmentInfo
+    wps: list[int]
+    footer_blocks: int = 0
+    sealed: bool = False
+    dirty: bool = False
+    complete_seqs: set = dataclasses.field(default_factory=set)
+    chunk_meta: dict = dataclasses.field(default_factory=dict)  # (drive, chunk) -> oob rows
+
+    def data_end(self) -> int:
+        return self.info.data_start() + self.info.n_stripes * self.info.chunk_blocks
+
+    def seal_end(self) -> int:
+        return self.data_end() + self.footer_blocks
+
+    def data_complete(self) -> bool:
+        return all(wp >= self.data_end() for wp in self.wps)
+
+
+def _scan_headers(drives, zns_cfg, stats) -> dict[int, _FoundSegment]:
+    found: dict[int, _FoundSegment] = {}
+    for d in drives:
+        for z in range(zns_cfg.n_zones):
+            if d.state[z] == ZoneState.EMPTY or d.wp[z] == 0:
+                continue
+            info = unpack_header(d.read(z, 0, 1)[0])
+            stats.recovery_blocks_read += 1
+            if info is None or info.seg_id in found:
+                continue
+            s, foot = solve_stripes_per_segment(
+                zns_cfg.zone_cap_blocks, info.chunk_blocks, zns_cfg.block_bytes
+            )
+            info.n_stripes = s
+            fs = _FoundSegment(
+                info=info, wps=[0] * len(info.zone_ids), footer_blocks=foot
+            )
+            for drive_idx, zid in enumerate(info.zone_ids):
+                fs.wps[drive_idx] = int(drives[drive_idx].wp[zid])
+            found[info.seg_id] = fs
+    return found
+
+
+def _scan_stripes(fs: _FoundSegment, drives, stats) -> None:
+    """OOB-scan the data region; classify complete vs partial stripes."""
+    info = fs.info
+    c = info.chunk_blocks
+    data_start = info.data_start()
+    per_seq_count: dict[int, int] = {}
+    for drive_idx, z in enumerate(info.zone_ids):
+        usable = min(fs.wps[drive_idx], fs.data_end()) - data_start
+        n_chunks = max(0, usable) // c  # trailing partial chunks are dropped
+        if n_chunks <= 0:
+            continue
+        oob = drives[drive_idx].read_oob(z, data_start, n_chunks * c)
+        stats.recovery_blocks_read += n_chunks * c
+        for chunk in range(n_chunks):
+            rows = oob[chunk * c : (chunk + 1) * c].copy()
+            seq = int(rows["stripe"][0])
+            per_seq_count[seq] = per_seq_count.get(seq, 0) + 1
+            fs.chunk_meta[(drive_idx, chunk)] = rows
+    n = info.n_drives
+    fs.complete_seqs = {s for s, cnt in per_seq_count.items() if cnt == n}
+    fs.dirty = any(cnt != n for cnt in per_seq_count.values())
+    # a drive with committed blocks beyond complete chunks is also dirty
+    for drive_idx in range(n):
+        usable = min(fs.wps[drive_idx], fs.data_end()) - data_start
+        if usable > 0 and usable % c != 0:
+            fs.dirty = True
+
+
+def _read_sealed_meta(fs: _FoundSegment, drives, zns_cfg, stats) -> None:
+    """Fast path: replay footers instead of scanning the whole OOB area."""
+    info = fs.info
+    c = info.chunk_blocks
+    n_entries = info.n_stripes * c
+    for drive_idx, z in enumerate(info.zone_ids):
+        foot = drives[drive_idx].read(z, fs.data_end(), fs.footer_blocks)
+        stats.recovery_blocks_read += foot.shape[0]
+        entries = unpack_footer(foot, n_entries, zns_cfg.block_bytes)
+        for chunk in range(info.n_stripes):
+            fs.chunk_meta[(drive_idx, chunk)] = entries[chunk * c : (chunk + 1) * c]
+    fs.complete_seqs = {
+        int(rows["stripe"][0]) for rows in fs.chunk_meta.values()
+    }
+    fs.sealed = True
+    fs.dirty = False
+
+
+def recover_array(
+    drives: list[SimZnsDrive], cfg: ZapRaidConfig, zns_cfg: ZnsConfig
+) -> ZapRAIDArray:
+    arr = ZapRAIDArray(cfg, zns_cfg, drives, _recovering=True)
+    arr.disarm_crash()
+    stats = arr.stats
+
+    found = _scan_headers(drives, zns_cfg, stats)
+    valid, discard = [], []
+    for fs in found.values():
+        # paper Case 2: any zone below the header size => discard segment
+        (discard if any(wp < fs.info.chunk_blocks for wp in fs.wps) else valid).append(fs)
+    for fs in discard:
+        for drive_idx, z in enumerate(fs.info.zone_ids):
+            if drives[drive_idx].wp[z] > 0:
+                drives[drive_idx].reset_zone(z)
+
+    for fs in valid:
+        fully_sealed = all(wp >= fs.seal_end() for wp in fs.wps)
+        if fully_sealed:
+            _read_sealed_meta(fs, drives, zns_cfg, stats)
+        else:
+            _scan_stripes(fs, drives, stats)
+
+    clean = [fs for fs in valid if not fs.dirty]
+    dirty = [fs for fs in valid if fs.dirty]
+    arr.next_seg_id = max((fs.info.seg_id for fs in valid), default=-1) + 1
+
+    for fs in clean:
+        _install_segment(arr, fs, zns_cfg)
+
+    # free-zone lists = complement of zones referenced by live segments
+    used = [set() for _ in drives]
+    for fs in valid:
+        for drive_idx, z in enumerate(fs.info.zone_ids):
+            used[drive_idx].add(z)
+    arr.free_zones = [
+        [z for z in range(zns_cfg.n_zones - 1, -1, -1) if z not in used[i]]
+        for i in range(len(drives))
+    ]
+    for i, d in enumerate(drives):
+        for z in arr.free_zones[i]:
+            if d.wp[z] > 0:
+                d.reset_zone(z)
+
+    _restore_open_slots(arr)
+
+    # ---- latest-wins metadata resolution over ALL valid segments ----------
+    user_wins: dict[int, tuple[int, int]] = {}
+    map_wins: dict[int, tuple[int, int]] = {}
+    for fs in valid:
+        _harvest_meta(arr, fs, user_wins, map_wins)
+
+    # Fast-forward the timestamp clock past everything on disk, and seed the
+    # per-LBA commit timestamps so post-recovery writes are never "stale".
+    max_ts = max(
+        [ts for ts, _ in user_wins.values()] + [ts for ts, _ in map_wins.values()],
+        default=0,
+    )
+    arr.ts_counter = max(arr.ts_counter, max_ts + 1)
+    for lba, (ts, _) in user_wins.items():
+        arr._lba_ts[lba] = ts
+    for gid, (ts, _) in map_wins.items():
+        arr._gid_ts[gid] = ts
+
+    dirty_ids = {fs.info.seg_id for fs in dirty}
+    # ---- re-inject winning blocks that live in dirty segments -------------
+    reinjected_gids = _reinject(arr, dirty, user_wins, map_wins, dirty_ids, drives)
+    arr.flush()
+    for fs in dirty:
+        for drive_idx, z in enumerate(fs.info.zone_ids):
+            drives[drive_idx].reset_zone(z)
+            arr.free_zones[drive_idx].append(z)
+
+    # ---- apply the remaining (clean-segment) wins --------------------------
+    _apply_wins(arr, user_wins, map_wins, dirty_ids, reinjected_gids)
+
+    # ---- re-seal data-complete segments missing their footers --------------
+    for ost in list(arr.open_segments.values()):
+        if ost.info.stripes_written >= ost.info.n_stripes:
+            arr._seal_segment(ost)
+    arr._drain_meta()
+    return arr
+
+
+def _install_segment(arr: ZapRAIDArray, fs: _FoundSegment, zns_cfg) -> None:
+    info = fs.info
+    rec = _SegmentRecord(info)
+    arr.segments[info.seg_id] = rec
+    c = info.chunk_blocks
+    if fs.sealed or fs.data_complete():
+        info.state = int(SegmentState.SEALED)
+        info.stripes_written = info.n_stripes
+        if not fs.sealed:
+            # data region complete, footer missing: keep as open so the
+            # re-seal pass below writes the footer.
+            info.state = int(SegmentState.OPEN)
+            ost = _OpenSegment(info, zns_cfg.block_bytes)
+            for (d, chunk), rows in fs.chunk_meta.items():
+                ost.meta[d, chunk * c : (chunk + 1) * c] = rows
+            arr.open_segments[info.seg_id] = ost
+            rec.cst = ost.cst
+    else:
+        info.state = int(SegmentState.OPEN)
+        per_drive: dict[int, int] = {}
+        for (d, chunk) in fs.chunk_meta:
+            per_drive[d] = max(per_drive.get(d, -1), chunk)
+        info.stripes_written = min((v + 1 for v in per_drive.values()), default=0)
+        ost = _OpenSegment(info, zns_cfg.block_bytes)
+        for (d, chunk), rows in fs.chunk_meta.items():
+            ost.meta[d, chunk * c : (chunk + 1) * c] = rows
+        arr.open_segments[info.seg_id] = ost
+        rec.cst = ost.cst
+    if info.uses_append:
+        if rec.cst is None:
+            rec.cst = CompactStripeTable(info.n_drives, info.n_stripes, info.group_size)
+        for (d, chunk), rows in fs.chunk_meta.items():
+            rec.cst.record(d, chunk, int(rows["stripe"][0]) % info.group_size)
+        if info.seg_id in arr.open_segments:
+            arr.open_segments[info.seg_id].cst = rec.cst
+
+
+def _restore_open_slots(arr: ZapRAIDArray) -> None:
+    cfg = arr.cfg
+    by_class: dict[tuple[int, bool], list[int]] = {}
+    for sid, ost in arr.open_segments.items():
+        if ost.info.stripes_written >= ost.info.n_stripes:
+            continue  # data-complete, awaiting re-seal; not reusable
+        key = (int(ost.info.seg_class), ost.info.group_size > 1)
+        by_class.setdefault(key, []).append(sid)
+
+    def take(seg_class: int, chunk_blocks: int, group: int) -> int:
+        key = (int(seg_class), group > 1)
+        if by_class.get(key):
+            return by_class[key].pop(0)
+        return arr._open_segment(SegmentClass(seg_class), chunk_blocks, group)
+
+    arr.small_ids, arr.large_ids = [], []
+    if not cfg.hybrid:
+        arr.small_ids.append(
+            take(int(SegmentClass.SMALL), cfg.chunk_blocks, cfg.group_size)
+        )
+    else:
+        for i in range(cfg.n_small):
+            g = cfg.group_size if i == 0 else 1
+            arr.small_ids.append(take(int(SegmentClass.SMALL), cfg.small_chunk_blocks, g))
+        for _ in range(cfg.n_large):
+            arr.large_ids.append(take(int(SegmentClass.LARGE), cfg.large_chunk_blocks, 1))
+
+
+def _harvest_meta(arr, fs: _FoundSegment, user_wins, map_wins) -> None:
+    info = fs.info
+    c = info.chunk_blocks
+    scheme = arr.scheme
+    for (d, chunk), rows in fs.chunk_meta.items():
+        seq = int(rows["stripe"][0])
+        if not fs.sealed and seq not in fs.complete_seqs:
+            continue
+        if scheme.drive_to_role(d, seq) >= scheme.k:
+            continue  # parity chunk
+        for b in range(c):
+            lba_field = int(rows["lba"][b])
+            if lba_field == int(INVALID_LBA):
+                continue
+            ts = int(rows["ts"][b])
+            pba = pack_pba(info.seg_id, d, info.data_start() + chunk * c + b)
+            if lba_field & 1:
+                gid = lba_field >> 1
+                if gid not in map_wins or map_wins[gid][0] < ts:
+                    map_wins[gid] = (ts, pba)
+            else:
+                lba = lba_field >> 1
+                if lba >= arr.cfg.logical_blocks:
+                    continue
+                if lba not in user_wins or user_wins[lba][0] < ts:
+                    user_wins[lba] = (ts, pba)
+
+
+def _reinject(arr, dirty, user_wins, map_wins, dirty_ids, drives) -> set[int]:
+    """Rewrite winning blocks whose only copy lives in a dirty segment."""
+    by_seg: dict[int, _FoundSegment] = {fs.info.seg_id: fs for fs in dirty}
+    reinjected_gids: set[int] = set()
+
+    def read_from_dirty(pba: int) -> np.ndarray:
+        seg_id, d, off = unpack_pba(pba)
+        fs = by_seg[seg_id]
+        return drives[d].read(fs.info.zone_ids[d], off, 1)[0].copy()
+
+    items = [
+        (ts, lba, pba, 0) for lba, (ts, pba) in user_wins.items()
+        if unpack_pba(pba)[0] in dirty_ids
+    ] + [
+        (ts, gid, pba, 1) for gid, (ts, pba) in map_wins.items()
+        if unpack_pba(pba)[0] in dirty_ids
+    ]
+    items.sort()
+    for ts, key, pba, is_map in items:
+        payload = read_from_dirty(pba)
+        arr.stats.recovery_blocks_read += 1
+        if is_map:
+            arr._append_block(arr._classify(1), -1, payload, ts, meta_gid=key)
+            reinjected_gids.add(key)
+        else:
+            arr._append_block(arr._classify(1), key, payload, ts)
+    return reinjected_gids
+
+
+def _apply_wins(arr: ZapRAIDArray, user_wins, map_wins, dirty_ids, reinjected_gids) -> None:
+    epg = arr.l2p.epg
+    group_max_ts: dict[int, int] = {}
+    dirty_winner_gids: set[int] = set()
+    for lba, (ts, pba) in user_wins.items():
+        gid = lba // epg
+        group_max_ts[gid] = max(group_max_ts.get(gid, 0), ts)
+        if unpack_pba(pba)[0] in dirty_ids:
+            # the group's authoritative copy moved during re-injection; the
+            # on-SSD mapping block is stale, so the group must stay resident.
+            dirty_winner_gids.add(gid)
+    offloaded: set[int] = set()
+    for gid, (mts, pba) in map_wins.items():
+        if gid not in reinjected_gids and unpack_pba(pba)[0] not in dirty_ids:
+            arr.mapping_table[gid] = pba
+            _mark_valid(arr, pba)
+        if (
+            arr.l2p.offload
+            and mts >= group_max_ts.get(gid, -1)
+            and gid not in dirty_winner_gids
+            and gid not in reinjected_gids
+        ):
+            offloaded.add(gid)
+    for lba, (ts, pba) in user_wins.items():
+        if unpack_pba(pba)[0] in dirty_ids:
+            continue  # re-injected already; L2P points at the new copy
+        if lba // epg in offloaded:
+            _mark_valid(arr, pba)  # entry stays on the SSD mapping block
+            continue
+        arr.l2p.set(lba, pba)
+        _mark_valid(arr, pba)
+    # ensure offloaded groups' referenced blocks are marked valid, then drop
+    # the in-memory copies (the paper keeps them on SSD).
+    for gid in offloaded:
+        entries = arr._read_mapping_block(gid)
+        if entries is None:
+            continue
+        for pba in entries:
+            if int(pba) != int(NO_PBA):
+                _mark_valid(arr, int(pba))
+        arr.l2p.drop_group(gid)
+    arr._drain_meta()
+
+
+def _mark_valid(arr: ZapRAIDArray, pba: int) -> None:
+    seg_id, d, off = unpack_pba(pba)
+    rec = arr.segments.get(seg_id)
+    if rec is None:
+        return
+    didx = off - rec.info.data_start()
+    if 0 <= didx < rec.valid.shape[1] and not rec.valid[d, didx]:
+        rec.valid[d, didx] = True
+        rec.valid_count += 1

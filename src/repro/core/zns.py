@@ -1,0 +1,194 @@
+"""Simulated ZNS SSD device model.
+
+Faithful functional model of the paper's device abstraction (§2.1):
+
+* append-only zones with per-zone write pointers and EMPTY/OPEN/FULL states;
+* 4 KiB logical blocks (configurable) with a per-page out-of-band (OOB)
+  metadata area (LBA u64, write-timestamp u64, stripe-id u32 -- 20 bytes, as
+  in §3.1);
+* ``zone_write`` -- ordered, offset must equal the write pointer, one
+  outstanding command per zone;
+* ``zone_append`` -- device assigns the offset and returns it; a *batch* of
+  appends to one zone may complete in any order (the device model permutes
+  completion order with a seeded RNG -- this is exactly the disorder the
+  compact stripe table must absorb);
+* explicit ``reset_zone`` / ``finish_zone``; bounded open zones.
+
+Crash injection: the array owns a shared ``CrashBudget``; every block commit
+decrements it, and when it hits zero the device stops persisting (simulating
+power loss mid-group).  Completed commits stay durable, exactly like NAND.
+
+The data plane (block payloads) lives in numpy; parity math over it runs
+through the JAX/Pallas kernels in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import numpy as np
+
+OOB_DTYPE = np.dtype([("lba", "<u8"), ("ts", "<u8"), ("stripe", "<u4")])
+OOB_ENTRY_BYTES = 20  # paper §3.1: 8 (LBA) + 8 (timestamp) + 4 (stripe id)
+INVALID_LBA = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+class ZoneState(enum.IntEnum):
+    EMPTY = 0
+    OPEN = 1
+    FULL = 2
+    OFFLINE = 3
+
+
+class DeviceCrashed(Exception):
+    """Raised when a write is attempted after the crash budget is exhausted."""
+
+
+class DriveFailed(Exception):
+    """Raised when reading a failed drive."""
+
+
+@dataclasses.dataclass
+class ZnsConfig:
+    n_zones: int = 16
+    zone_cap_blocks: int = 1024  # zone capacity in blocks
+    block_bytes: int = 4096
+    max_open_zones: int = 8
+
+    @property
+    def capacity_blocks(self) -> int:
+        return self.n_zones * self.zone_cap_blocks
+
+
+class CrashBudget:
+    """Shared block-commit budget for crash injection (None = no crash)."""
+
+    def __init__(self, blocks: Optional[int] = None):
+        self.remaining = blocks
+
+    def consume(self) -> bool:
+        """Consume one block commit; False if the power is already out."""
+        if self.remaining is None:
+            return True
+        if self.remaining <= 0:
+            return False
+        self.remaining -= 1
+        return True
+
+
+class SimZnsDrive:
+    """One simulated ZNS SSD."""
+
+    def __init__(self, cfg: ZnsConfig, drive_id: int, budget: Optional[CrashBudget] = None):
+        self.cfg = cfg
+        self.drive_id = drive_id
+        self.budget = budget or CrashBudget(None)
+        self.data = np.zeros(
+            (cfg.n_zones, cfg.zone_cap_blocks, cfg.block_bytes), dtype=np.uint8
+        )
+        self.oob = np.zeros((cfg.n_zones, cfg.zone_cap_blocks), dtype=OOB_DTYPE)
+        self.oob["lba"] = INVALID_LBA
+        self.wp = np.zeros(cfg.n_zones, dtype=np.int64)
+        self.state = np.full(cfg.n_zones, ZoneState.EMPTY, dtype=np.int32)
+        self.failed = False
+        # Device counters (used by benchmarks / write-amplification accounting)
+        self.blocks_written = 0
+        self.zone_resets = 0
+
+    # -- state management ---------------------------------------------------
+
+    def _check_alive(self):
+        if self.failed:
+            raise DriveFailed(f"drive {self.drive_id} failed")
+
+    def open_zone_count(self) -> int:
+        return int(np.sum(self.state == ZoneState.OPEN))
+
+    def reset_zone(self, zone: int) -> None:
+        self._check_alive()
+        self.wp[zone] = 0
+        self.state[zone] = ZoneState.EMPTY
+        self.data[zone] = 0
+        self.oob[zone] = np.zeros((), dtype=OOB_DTYPE)
+        self.oob[zone]["lba"] = INVALID_LBA
+        self.zone_resets += 1
+
+    def finish_zone(self, zone: int) -> None:
+        self._check_alive()
+        self.state[zone] = ZoneState.FULL
+
+    # -- writes -------------------------------------------------------------
+
+    def _commit_block(self, zone: int, block: np.ndarray, oob_entry) -> bool:
+        """Persist one block at the write pointer.  False => power lost."""
+        if not self.budget.consume():
+            return False
+        off = int(self.wp[zone])
+        assert off < self.cfg.zone_cap_blocks, (zone, off)
+        self.data[zone, off] = block
+        self.oob[zone, off] = oob_entry
+        self.wp[zone] = off + 1
+        self.blocks_written += 1
+        if self.wp[zone] == self.cfg.zone_cap_blocks:
+            self.state[zone] = ZoneState.FULL
+        return True
+
+    def zone_write(self, zone: int, offset: int, blocks: np.ndarray, oobs: np.ndarray) -> None:
+        """Ordered write: ``offset`` must equal the zone write pointer."""
+        self._check_alive()
+        if offset != int(self.wp[zone]):
+            raise ValueError(
+                f"zone_write offset {offset} != wp {int(self.wp[zone])} (zone {zone})"
+            )
+        if self.state[zone] == ZoneState.EMPTY:
+            self.state[zone] = ZoneState.OPEN
+        for i in range(blocks.shape[0]):
+            if not self._commit_block(zone, blocks[i], oobs[i]):
+                raise DeviceCrashed(f"crash during zone_write drive={self.drive_id}")
+
+    def zone_append_begin(self, zone: int) -> None:
+        self._check_alive()
+        if self.state[zone] == ZoneState.EMPTY:
+            self.state[zone] = ZoneState.OPEN
+
+    def zone_append_commit(self, zone: int, blocks: np.ndarray, oobs: np.ndarray) -> int:
+        """Commit one append command (a contiguous chunk); returns its offset.
+
+        The *caller* (the array's group committer) is responsible for issuing
+        commands of a batch in permuted completion order; the device only
+        guarantees that each command lands contiguously at the current wp.
+        """
+        self._check_alive()
+        off = int(self.wp[zone])
+        for i in range(blocks.shape[0]):
+            if not self._commit_block(zone, blocks[i], oobs[i]):
+                raise DeviceCrashed(f"crash during zone_append drive={self.drive_id}")
+        return off
+
+    # -- reads --------------------------------------------------------------
+
+    def read(self, zone: int, offset: int, n_blocks: int) -> np.ndarray:
+        self._check_alive()
+        return self.data[zone, offset : offset + n_blocks]
+
+    def read_oob(self, zone: int, offset: int, n_blocks: int) -> np.ndarray:
+        self._check_alive()
+        return self.oob[zone, offset : offset + n_blocks]
+
+    # -- failure ------------------------------------------------------------
+
+    def fail(self) -> None:
+        """Full-drive failure: all data is gone."""
+        self.failed = True
+
+    def replace(self) -> None:
+        """Swap in a fresh drive (same identity, empty media)."""
+        self.__init__(self.cfg, self.drive_id, self.budget)
+
+
+def make_array_drives(
+    n_drives: int, cfg: ZnsConfig, budget: Optional[CrashBudget] = None
+) -> list[SimZnsDrive]:
+    budget = budget or CrashBudget(None)
+    return [SimZnsDrive(cfg, i, budget) for i in range(n_drives)]

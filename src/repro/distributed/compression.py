@@ -1,0 +1,73 @@
+"""Gradient compression for bandwidth-bound data-parallel training.
+
+Two composable compressors, both with error feedback (the residual is
+carried in the train state so compression error accumulates into later
+steps instead of being lost):
+
+* ``int8``  -- symmetric per-tensor quantization before the (simulated)
+  all-reduce: 4x wire reduction on fp32 grads, 2x on bf16.
+* ``topk``  -- keep the top rho fraction of entries by magnitude (with a
+  deterministic threshold estimated from the tensor's moments, avoiding a
+  full sort on TPU), zeroing the rest.
+
+With pjit, gradients are reduced by XLA inside the backward pass, so the
+compressor runs *before* the optimizer applies updates -- this matches
+error-feedback SGD formulations (the compression is applied to the summed
+gradient; wire-level compression is modeled for the roofline in
+EXPERIMENTS.md, and exact on real deployments that use
+``jax.experimental.custom_partitioning`` reduce hooks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jax.Array) -> jax.Array:
+    """Quantize-dequantize to int8 (symmetric, per tensor)."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return (q.astype(jnp.float32) * scale).astype(g.dtype)
+
+
+def compress_topk(g: jax.Array, rho: float = 0.05) -> jax.Array:
+    """Magnitude sparsification keeping ~rho of entries.
+
+    The threshold is estimated as mean + z*std of |g| (z chosen from rho via
+    a Gaussian tail approximation) -- O(n) instead of O(n log n), which is
+    what production gradient-sparsification systems do on accelerators.
+    """
+    gf = g.astype(jnp.float32)
+    a = jnp.abs(gf)
+    mu = jnp.mean(a)
+    sd = jnp.std(a) + 1e-12
+    # z such that P(|x| > mu + z sd) ~ rho for a half-normal-ish tail
+    z = jnp.sqrt(jnp.maximum(0.0, -2.0 * jnp.log(jnp.asarray(rho))))
+    thr = mu + (z - 1.0) * sd
+    return jnp.where(a >= thr, gf, 0.0).astype(g.dtype)
+
+
+def apply_compression(grads, residual, kind: str):
+    """Error-feedback compression: compress(g + r); r' = (g + r) - c."""
+    if kind == "none":
+        return grads, residual
+
+    fn = {"int8": compress_int8, "topk": compress_topk}[kind]
+
+    def one(g, r):
+        full = g.astype(jnp.float32) + r
+        c = fn(full)
+        return c.astype(g.dtype), full - c.astype(jnp.float32)
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (
+        jax.tree.unflatten(tdef, [o[0] for o in outs]),
+        jax.tree.unflatten(tdef, [o[1] for o in outs]),
+    )
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,136 @@
+"""Logical-axis -> mesh-axis resolution (GSPMD partitioning rules).
+
+Model code annotates every parameter dimension with a *logical* axis name
+("heads", "ff", "vocab", "experts", ...).  This module resolves those names
+against a physical mesh:
+
+* tensor-parallel axes map to ``model``;
+* with FSDP enabled, the ``embed`` (d_model) dimension of weight matrices is
+  additionally sharded over the data axes (``("pod","data")`` on the
+  multi-pod mesh) -- ZeRO-3-style weight sharding;
+* a dimension only receives a mesh axis if its size is divisible by the mesh
+  axis size (e.g. grok's 8 experts do NOT divide a 16-way model axis, so the
+  resolver falls through to sharding the expert *ffn* dimension instead --
+  TP-inside-expert; llama4's 16 experts DO divide it -- true EP);
+* each mesh axis is used at most once per tensor.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def mesh_rules(mesh: Mesh, *, fsdp: bool = False, tp: bool = True) -> dict:
+    """logical axis -> mesh axis (str or tuple) for this mesh."""
+    names = mesh.axis_names
+    data_axes = tuple(a for a in ("pod", "data") if a in names)
+    model = ("model" if "model" in names else None) if tp else None
+    rules = {
+        "vocab": model,
+        "heads": model,
+        "kv": model,
+        "ff": model,
+        "experts": model,
+        "ssm_inner": model,
+        "ssm_heads": model,
+        "ssm_conv_ch": model,
+        "embed": (data_axes if fsdp and data_axes else None),
+        "layers": None,
+        None: None,
+    }
+    return rules
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]
+
+
+def resolve_spec(shape: tuple, axes: tuple, rules: dict, mesh: Mesh) -> P:
+    """Build a PartitionSpec for one tensor, honoring divisibility and
+    single-use-per-mesh-axis constraints."""
+    assert len(shape) == len(axes), (shape, axes)
+    used: set = set()
+    out = []
+    for dim, logical in zip(shape, axes):
+        mesh_axis = rules.get(logical)
+        if mesh_axis is None:
+            out.append(None)
+            continue
+        flat = mesh_axis if isinstance(mesh_axis, tuple) else (mesh_axis,)
+        if any(a in used for a in flat):
+            out.append(None)
+            continue
+        if dim % _axis_size(mesh, mesh_axis) != 0:
+            out.append(None)
+            continue
+        used.update(flat)
+        out.append(mesh_axis)
+    return P(*out)
+
+
+def param_specs(param_shapes, axes_tree, mesh: Mesh, *, fsdp: bool = False,
+                tp: bool = True):
+    """PartitionSpec tree for a params tree (shapes from jax.eval_shape)."""
+    rules = mesh_rules(mesh, fsdp=fsdp, tp=tp)
+
+    def leaf(shape_leaf, ax):
+        return resolve_spec(tuple(shape_leaf.shape), ax, rules, mesh)
+
+    return jax.tree.map(
+        leaf, param_shapes, axes_tree,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict),
+    )
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def batch_axes(mesh: Mesh):
+    """Mesh axes used for data parallelism (batch dimension)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_spec(mesh: Mesh, ndim: int, *, batch_dim: int = 0,
+              batch_size: Optional[int] = None,
+              include_model: bool = False) -> P:
+    """Batch-over-data-axes spec; leaves the batch replicated if its size
+    does not divide the data-parallel degree (e.g. long_500k's batch of 1).
+    With ``include_model`` (pure-DP profiles) the batch also shards over the
+    model axis."""
+    dp = batch_axes(mesh)
+    if include_model and "model" in mesh.axis_names:
+        dp = dp + ("model",)
+    parts = [None] * ndim
+    if dp and (batch_size is None or batch_size % _axis_size(mesh, dp) == 0):
+        parts[batch_dim] = dp if len(dp) > 1 else dp[0]
+    return P(*parts)
+
+
+def cache_spec(mesh: Mesh, shape: tuple, kv_heads_dim: int, seq_dim: int,
+               batch_dim: int = 1) -> P:
+    """KV-cache spec: batch over data axes; kv-heads over model when
+    divisible, else sequence over model (cache sequence parallelism)."""
+    dp = batch_axes(mesh)
+    parts: list = [None] * len(shape)
+    if dp and shape[batch_dim] % _axis_size(mesh, dp) == 0:
+        parts[batch_dim] = dp
+    model = "model" if "model" in mesh.axis_names else None
+    if model:
+        msz = mesh.shape[model]
+        if shape[kv_heads_dim] % msz == 0 and shape[kv_heads_dim] >= msz:
+            parts[kv_heads_dim] = model
+        elif shape[seq_dim] % msz == 0:
+            parts[seq_dim] = model
+    return P(*parts)

@@ -1,0 +1,111 @@
+"""Public jit'd entry points for the kernels package.
+
+Every op takes ``use_pallas``/``interpret`` switches so the same call site
+serves three modes:
+
+* ``use_pallas=False``   -> pure-jnp oracle (CPU datapath, autodiff-safe)
+* ``use_pallas=True, interpret=True``  -> Pallas kernel body on CPU (tests)
+* ``use_pallas=True, interpret=False`` -> compiled TPU kernel (production)
+
+Byte-level helpers convert between uint8 chunk buffers and the int32-packed
+lanes the kernels consume.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gf
+from repro.kernels import ref
+from repro.kernels.gf256_matmul import gf256_matmul
+from repro.kernels.parity_xor import parity_xor
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def pack_bytes(data_u8: jax.Array) -> jax.Array:
+    """(..., 4*n) uint8 -> (..., n) int32 little-endian lane packing."""
+    assert data_u8.shape[-1] % 4 == 0
+    return jax.lax.bitcast_convert_type(
+        data_u8.reshape(*data_u8.shape[:-1], -1, 4), jnp.int32
+    )
+
+
+def unpack_bytes(data_i32: jax.Array) -> jax.Array:
+    """(..., n) int32 -> (..., 4*n) uint8."""
+    u8 = jax.lax.bitcast_convert_type(data_i32, jnp.uint8)
+    return u8.reshape(*data_i32.shape[:-1], -1)
+
+
+def _pad_lanes(x: jax.Array) -> tuple[jax.Array, int]:
+    """Pad the lane dim up to a multiple of 128 (TPU lane width)."""
+    n = x.shape[-1]
+    pad = (-n) % 128
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, n
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def xor_parity(
+    chunks_i32: jax.Array, *, use_pallas: bool = True, interpret: bool = True
+) -> jax.Array:
+    """XOR parity of (k, n) int32 -> (n,) int32."""
+    if use_pallas:
+        padded, n = _pad_lanes(chunks_i32)
+        return parity_xor(padded, interpret=interpret)[:n]
+    return ref.parity_xor_ref(chunks_i32)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def rs_matmul(
+    coeff_i32: jax.Array,
+    chunks_i32: jax.Array,
+    *,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """GF(256) (m,k) x (k,n) -> (m,n) on int32-packed bytes."""
+    if use_pallas:
+        padded, n = _pad_lanes(chunks_i32)
+        return gf256_matmul(coeff_i32, padded, interpret=interpret)[:, :n]
+    return ref.gf256_matmul_ref(coeff_i32, chunks_i32)
+
+
+def rs_encode(
+    chunks_i32: jax.Array,
+    m: int,
+    *,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Encode (k, n) data chunks into (m, n) RS parity chunks."""
+    k = chunks_i32.shape[0]
+    coeff = jnp.asarray(gf.rs_parity_matrix(k, m), jnp.int32)
+    return rs_matmul(coeff, chunks_i32, use_pallas=use_pallas, interpret=interpret)
+
+
+def rs_decode(
+    surviving_i32: jax.Array,
+    surviving_rows: tuple[int, ...],
+    k: int,
+    m: int,
+    *,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Reconstruct the k data chunks from any k surviving codeword rows."""
+    dec = jnp.asarray(gf.rs_decode_matrix(k, m, tuple(surviving_rows)), jnp.int32)
+    return rs_matmul(dec, surviving_i32, use_pallas=use_pallas, interpret=interpret)
+
+
+def ssd_chunk_scan(
+    x, dt, a, b, c, h0=None, *, chunk: int = 128,
+    use_pallas: bool = True, interpret: bool = True,
+):
+    """Mamba-2 SSD scan; see kernels/ssd_scan.py.  Returns (y, h_final)."""
+    if use_pallas:
+        return ssd_scan(x, dt, a, b, c, h0, chunk=chunk, interpret=interpret)
+    return ref.ssd_scan_ref(x, dt, a, b, c, h0)

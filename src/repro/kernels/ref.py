@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: each kernel's test sweeps shapes and
+dtypes and asserts allclose/array_equal against the function here.  They are
+also the CPU fallback datapath used by the storage simulator when Pallas is
+not requested.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gf
+
+
+def parity_xor_ref(data: jax.Array) -> jax.Array:
+    """XOR-reduce ``data`` of shape (k, n) int32 -> (n,) int32."""
+    return jax.lax.reduce(
+        data, jnp.int32(0), jax.lax.bitwise_xor, dimensions=(0,)
+    )
+
+
+def gf256_matmul_ref(coeff: jax.Array, data: jax.Array) -> jax.Array:
+    """GF(256) matmul on int32-packed bytes.
+
+    coeff: (m, k) int32 with values in [0, 256) -- GF coefficients.
+    data:  (k, n) int32, each int32 packing 4 independent GF(256) bytes.
+    returns (m, n) int32 packed the same way.
+    """
+    m, k = coeff.shape
+
+    def one_row(j):
+        acc = jnp.zeros(data.shape[1:], jnp.int32)
+        for i in range(k):
+            acc = acc ^ gf.swar_gf_scale(data[i], coeff[j, i])
+        return acc
+
+    return jnp.stack([one_row(j) for j in range(m)], axis=0)
+
+
+def ssd_scan_ref(
+    x: jax.Array,      # (bh, t, p)   values (already multiplied by nothing)
+    dt: jax.Array,     # (bh, t)      softplus'd step sizes (>0)
+    a: jax.Array,      # (bh,)        per-head negative decay rate (A < 0)
+    b: jax.Array,      # (bh, t, n)   input->state projection
+    c: jax.Array,      # (bh, t, n)   state->output projection
+    h0: jax.Array | None = None,  # (bh, n, p) initial state
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential reference for the Mamba-2 SSD recurrence.
+
+    h_t = exp(dt_t * a) * h_{t-1} + dt_t * (b_t outer x_t)
+    y_t = c_t @ h_t
+    Returns (y, h_final): y (bh, t, p), h_final (bh, n, p).
+    All math in float32.
+    """
+    bh, t, p = x.shape
+    n = b.shape[-1]
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((bh, n, p), jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp  # (bh,p),(bh,),(bh,n),(bh,n)
+        decay = jnp.exp(dt_t * a)[:, None, None]  # (bh,1,1)
+        h = decay * h + dt_t[:, None, None] * (b_t[:, :, None] * x_t[:, None, :])
+        y_t = jnp.einsum("bn,bnp->bp", c_t, h)
+        return h, y_t
+
+    inps = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(b, 1, 0),
+        jnp.moveaxis(c, 1, 0),
+    )
+    h_final, ys = jax.lax.scan(step, h0, inps)
+    return jnp.moveaxis(ys, 0, 1), h_final
+
+
+def gf256_matmul_np(coeff: np.ndarray, data_bytes: np.ndarray) -> np.ndarray:
+    """Host oracle on raw uint8 (table based), for cross-checking the SWAR path."""
+    return gf.gf_matmul_np(coeff.astype(np.uint8), data_bytes)

@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape) cell on
+the production meshes and extract roofline inputs from the compiled module.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all              # every cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi # 512-chip
+
+Results are written incrementally to ``experiments/dryrun/*.json`` (one file
+per cell x mesh); existing files are skipped so the sweep is resumable.
+"""
+import argparse
+import json
+import math
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import roofline as rl
+from repro.configs import ARCHS, get_config
+from repro.data.pipeline import DataConfig
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, batch_struct, cell_supported, decode_structs
+from repro.optim import adamw
+from repro.train import steps as steps_mod
+
+OUT_DIR = pathlib.Path("experiments/dryrun")
+
+
+def _dev_bytes(shape_tree, spec_tree, mesh) -> float:
+    """Per-device bytes of a sharded pytree (from shapes + specs)."""
+    total = 0.0
+    flat_s = jax.tree.leaves(
+        spec_tree, is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec)
+    )
+    flat_t = jax.tree.leaves(shape_tree)
+    for leaf, spec in zip(flat_t, flat_s):
+        n = math.prod(leaf.shape) if leaf.shape else 1
+        denom = 1
+        for ax in spec:
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                denom *= mesh.shape[a]
+        total += n * jnp.dtype(leaf.dtype).itemsize / denom
+    return total
+
+
+def _cache_specs(model, cfg, cache_structs, mesh):
+    specs = {}
+    for name, leaf in cache_structs.items():
+        if name == "len":
+            specs[name] = jax.sharding.PartitionSpec()
+        elif name in ("k", "v", "ak", "av", "ck", "cv"):
+            specs[name] = sh.cache_spec(mesh, leaf.shape, kv_heads_dim=3, seq_dim=2)
+        elif name == "conv":
+            specs[name] = sh.cache_spec(mesh, leaf.shape, kv_heads_dim=3, seq_dim=2)
+        elif name == "ssd":
+            # (L,B,H,N,P): heads over model, batch over data
+            specs[name] = sh.cache_spec(mesh, leaf.shape, kv_heads_dim=2, seq_dim=3)
+        else:
+            specs[name] = jax.sharding.PartitionSpec()
+    return specs
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: pathlib.Path,
+             *, force: bool = False, opt_overrides: dict | None = None,
+             cfg_overrides: dict | None = None, tag: str = "") -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    out_file = out_dir / f"{arch}__{shape_name}__{mesh_name}{tag}.json"
+    if out_file.exists() and not force:
+        return json.loads(out_file.read_text())
+    cfg = get_config(arch)
+    if cfg_overrides:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    cell = SHAPES[shape_name]
+    ok, reason = cell_supported(cfg, shape_name)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": cell.kind, "status": "skip", "reason": reason,
+    }
+    if not ok:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        out_file.write_text(json.dumps(result, indent=2))
+        return result
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = math.prod(mesh.shape.values())
+    try:
+        result.update(_lower_and_analyze(cfg, cell, mesh, n_dev, opt_overrides))
+        result["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 -- record the failure, keep sweeping
+        result["status"] = "fail"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc(limit=20)
+    result["wall_s"] = round(time.time() - t0, 1)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_file.write_text(json.dumps(result, indent=2))
+    return result
+
+
+def _lower_and_analyze(cfg, cell, mesh, n_dev, opt_overrides=None):
+    opt_cfg = adamw.AdamWConfig(**(opt_overrides or {}))
+    model, train_step = steps_mod.make_train_step(cfg, opt_cfg)
+    key = jax.random.PRNGKey(0)
+    tp = cfg.parallelism == "tp"
+    param_shapes = jax.eval_shape(model.init, key)
+    pspecs = sh.param_specs(param_shapes, model.axes(), mesh, fsdp=cfg.fsdp, tp=tp)
+    param_dev_bytes = _dev_bytes(param_shapes, pspecs, mesh)
+    inc_model = not tp  # pure-DP profile: batch shards over the model axis too
+
+    if cell.kind == "train":
+        opt_shapes = jax.eval_shape(
+            lambda p: steps_mod.init_opt_state(model, p, opt_cfg), param_shapes
+        )
+        ospecs = adamw.state_specs(pspecs, param_shapes, mesh, zero1=True)
+        if "residual" in opt_shapes:
+            ospecs["residual"] = ospecs["m"]
+        opt_dev_bytes = _dev_bytes(opt_shapes, ospecs, mesh)
+        batch = batch_struct(cfg, cell)
+        bspecs = {k: sh.data_spec(mesh, len(v.shape), batch_size=v.shape[0],
+                                  include_model=inc_model)
+                  for k, v in batch.items()}
+        fn = jax.jit(
+            train_step,
+            in_shardings=(
+                sh.named(mesh, pspecs), sh.named(mesh, ospecs), sh.named(mesh, bspecs)
+            ),
+        )
+        with jax.set_mesh(mesh):
+            lowered = fn.lower(param_shapes, opt_shapes, batch)
+        analytic_hbm = 2 * param_dev_bytes + 2 * opt_dev_bytes
+        state_bytes = param_dev_bytes + opt_dev_bytes
+    elif cell.kind == "prefill":
+        _, prefill_step = steps_mod.make_prefill_step(cfg)
+        batch = batch_struct(cfg, cell)
+        bspecs = {k: sh.data_spec(mesh, len(v.shape), batch_size=v.shape[0],
+                                  include_model=inc_model)
+                  for k, v in batch.items()}
+        fn = jax.jit(
+            prefill_step,
+            in_shardings=(sh.named(mesh, pspecs), sh.named(mesh, bspecs)),
+        )
+        with jax.set_mesh(mesh):
+            lowered = fn.lower(param_shapes, batch)
+        analytic_hbm = param_dev_bytes
+        state_bytes = param_dev_bytes
+    else:  # decode
+        _, decode_step = steps_mod.make_decode_step(cfg)
+        cache_structs, tok = decode_structs(model, cfg, cell)
+        cspecs = _cache_specs(model, cfg, cache_structs, mesh)
+        cache_dev_bytes = _dev_bytes(cache_structs, cspecs, mesh)
+        fn = jax.jit(
+            decode_step,
+            in_shardings=(
+                sh.named(mesh, pspecs), sh.named(mesh, cspecs),
+                sh.named(mesh, sh.data_spec(mesh, 2, batch_size=cell.global_batch)),
+            ),
+        )
+        with jax.set_mesh(mesh):
+            lowered = fn.lower(param_shapes, cache_structs, tok)
+        analytic_hbm = param_dev_bytes + 2 * cache_dev_bytes
+        state_bytes = param_dev_bytes + cache_dev_bytes
+
+    with jax.set_mesh(mesh):
+        compiled = lowered.compile()
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+    except Exception:
+        cost = {}
+    mem_info = {}
+    try:
+        ma = compiled.memory_analysis()
+        for field in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+        ):
+            if hasattr(ma, field):
+                mem_info[field] = int(getattr(ma, field))
+    except Exception as e:
+        mem_info["error"] = str(e)
+
+    hlo = compiled.as_text()
+    report = rl.analyze_hlo(
+        hlo, n_devices=n_dev, cost_analysis=cost, analytic_hbm_bytes=analytic_hbm
+    )
+    model_fl = rl.model_flops_per_step(cfg, cell)
+    per_dev_model_fl = model_fl / n_dev
+    dom = report.dominant()
+    bound_s = max(report.compute_s, report.memory_s, report.collective_s)
+    return {
+        "n_devices": n_dev,
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        "param_dev_bytes": param_dev_bytes,
+        "state_dev_bytes": state_bytes,
+        "memory_analysis": mem_info,
+        "roofline": report.to_dict(),
+        "model_flops_step": model_fl,
+        "model_flops_dev": per_dev_model_fl,
+        "useful_flops_ratio": (
+            per_dev_model_fl / report.flops if report.flops else None
+        ),
+        # fraction of the chip's peak the step achieves if it runs exactly at
+        # its dominant roofline bound: (useful FLOPs / peak) / bound_time
+        "roofline_fraction": (
+            (per_dev_model_fl / rl.PEAK_FLOPS) / bound_s if bound_s else None
+        ),
+        "dominant": dom,
+        "hlo_bytes": len(hlo),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (perf variants)")
+    ap.add_argument("--tag", default="", help="suffix for variant result files")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = {"true": True, "false": False}.get(
+            v.lower(), int(v) if v.isdigit() else v
+        )
+
+    out_dir = pathlib.Path(args.out)
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                r = run_cell(arch, shape, mp, out_dir, force=args.force,
+                             cfg_overrides=overrides or None, tag=args.tag)
+                mesh_s = "multi" if mp else "single"
+                rf = r.get("roofline_fraction")
+                extra = (
+                    f"dom={r.get('dominant')} roofline={rf:.3f}"
+                    if rf is not None
+                    else r.get("reason", r.get("error", ""))[:70]
+                )
+                print(
+                    f"{arch:24s} {shape:12s} {mesh_s:6s} {r['status']:5s} "
+                    f"wall={r.get('wall_s', 0)}s {extra}",
+                    flush=True,
+                )
+
+
+if __name__ == "__main__":
+    main()

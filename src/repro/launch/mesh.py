@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state.  The single-pod mesh
+is 16x16 = 256 chips (data, model); the multi-pod mesh is 2x16x16 = 512
+chips (pod, data, model).  The dry-run launcher forces 512 host devices
+before any jax import; real deployments get the same topology from the TPU
+runtime.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Tiny mesh over the actually-present local devices (tests/examples)."""
+    n = len(jax.devices())
+    dp = max(1, n // model_parallel)
+    return jax.make_mesh((dp, model_parallel), ("data", "model"))

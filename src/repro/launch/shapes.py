@@ -1,0 +1,68 @@
+"""Assigned input-shape cells and their ShapeDtypeStruct input specs.
+
+Every (architecture x shape) pair is a dry-run cell.  ``decode_*`` /
+``long_*`` lower ``decode_step`` (one new token against a seq_len KV/state
+cache); ``prefill_32k`` lowers the prefill; ``train_4k`` lowers the full
+train step.  ``long_500k`` requires sub-quadratic attention and runs only
+for the SSM/hybrid architectures (spec-directed skip for pure
+full-attention archs; see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and cfg.family not in LONG_CONTEXT_FAMILIES:
+        return False, (
+            "spec-directed skip: long_500k needs sub-quadratic attention; "
+            f"{cfg.name} is a full-attention family ({cfg.family})"
+        )
+    return True, ""
+
+
+def batch_struct(cfg: ModelConfig, cell: ShapeCell):
+    """ShapeDtypeStructs for the model-input batch of a train/prefill cell."""
+    b, t = cell.global_batch, cell.seq_len
+    out = {
+        "tokens": jax.ShapeDtypeStruct((b, t), jnp.int32),
+    }
+    if cell.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    if cfg.family == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_len, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        out["vis_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vis_prefix_len, cfg.vis_embed_dim), jnp.float32
+        )
+    return out
+
+
+def decode_structs(model, cfg: ModelConfig, cell: ShapeCell):
+    """(cache_structs, token_struct) for a decode cell."""
+    cache = model.init_cache(cell.global_batch, cell.seq_len)
+    tokens = jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32)
+    return cache, tokens

@@ -1,0 +1,190 @@
+"""Mamba-2 (SSD) block: chunked state-space duality in pure JAX.
+
+Math identical to the Pallas kernel in ``kernels/ssd_scan.py`` (which is the
+TPU fast path, validated against ``kernels/ref.py``); this module provides
+the einsum formulation that XLA partitions across the mesh for training and
+the dry-run.  B/C projections are shared across heads (ngroups=1), heads are
+sharded over the model axis.
+
+Block structure (Mamba-2 paper):
+  in-proj -> [z | x | B | C | dt] -> causal conv(x,B,C) -> silu
+          -> SSD(x, dt, A, B, C) + D*x -> gated RMSNorm(z) -> out-proj
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dtype_of, normal_init, rmsnorm
+
+
+def init_mamba_block(key, cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.d_inner
+    h, n, cw = cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_conv
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 8)
+    sc = d ** -0.5
+    p = {
+        "w_z": normal_init(ks[0], (d, di), sc, dt),
+        "w_x": normal_init(ks[1], (d, di), sc, dt),
+        "w_b": normal_init(ks[2], (d, n), sc, dt),
+        "w_c": normal_init(ks[3], (d, n), sc, dt),
+        "w_dt": normal_init(ks[4], (d, h), sc, jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "conv_w": normal_init(ks[5], (cw, di + 2 * n), 0.2, dt),
+        "conv_b": jnp.zeros((di + 2 * n,), dt),
+        "norm": jnp.ones((di,), dt),
+        "w_out": normal_init(ks[6], (di, d), di ** -0.5, dt),
+    }
+    a = {
+        "w_z": ("embed", "ssm_inner"),
+        "w_x": ("embed", "ssm_inner"),
+        "w_b": ("embed", None),
+        "w_c": ("embed", None),
+        "w_dt": ("embed", "ssm_heads"),
+        "dt_bias": ("ssm_heads",),
+        "a_log": ("ssm_heads",),
+        "d_skip": ("ssm_heads",),
+        "conv_w": (None, "ssm_conv_ch"),
+        "conv_b": ("ssm_conv_ch",),
+        "norm": ("ssm_inner",),
+        "w_out": ("ssm_inner", "embed"),
+    }
+    return p, a
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time.  x: (B,T,C), w: (W,C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for j in range(width):  # static tiny loop (W=4)
+        out = out + xp[:, j : j + x.shape[1], :].astype(jnp.float32) * w[j].astype(
+            jnp.float32
+        )
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(x, dt, a, b, c, h0=None, *, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B,T,H,P) values; dt: (B,T,H) (>0); a: (H,) (<0);
+    b, c: (B,T,N) shared across heads.  Returns (y (B,T,H,P), h (B,H,N,P)).
+    """
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, t)
+    t_orig = t
+    pad = (-t) % q
+    if pad:  # dt=0 padding steps are exact identities (decay exp(0)=1, no input)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        t = t + pad
+    nc = t // q
+    xr = x.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    dtr = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    br = b.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cr = c.reshape(bsz, nc, q, n).astype(jnp.float32)
+
+    la = dtr * a  # (B,nc,Q,H), <= 0
+    s = jnp.cumsum(la, axis=2)
+    rel = s[:, :, :, None, :] - s[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    # mask BEFORE exp: the upper triangle has rel > 0 and exp overflows,
+    # poisoning gradients through jnp.where (inf * 0 -> NaN in the vjp).
+    lmat = jnp.exp(jnp.where(tri[None, None, :, :, None], rel, -1e30))
+    cb = jnp.einsum("bcqn,bcpn->bcqp", cr, br)  # shared across heads
+    xdt = xr * dtr[..., None]
+    y_diag = jnp.einsum("bcqp,bcqph,bcphv->bcqhv", cb, lmat, xdt)
+
+    # per-chunk input states and decays
+    w = jnp.exp(s[:, :, -1:, :] - s) * dtr  # (B,nc,Q,H)
+    states = jnp.einsum("bcpn,bcph,bcphv->bchnv", br, w, xr)  # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(s[:, :, -1, :])  # (B,nc,H)
+
+    h0 = (
+        jnp.zeros((bsz, h, n, p), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+
+    def step(carry, inp):
+        st, dec = inp  # (B,H,N,P), (B,H)
+        prev = carry
+        new = dec[:, :, None, None] * prev + st
+        return new, prev  # emit the state *entering* the chunk
+
+    _last, h_prev = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # (B,nc,H,N,P)
+    y_off = jnp.einsum("bcqn,bchnv->bcqhv", cr, h_prev) * jnp.exp(s)[..., None]
+    y = (y_diag + y_off).reshape(bsz, t, h, p)[:, :t_orig]
+    return y.astype(x.dtype), _last
+
+
+def mamba_apply(p, x, cfg: ModelConfig, *, state=None):
+    """Mamba-2 block.  Training/prefill: state=None.  Decode: state is
+    (conv_state (B,W-1,C), ssd_state (B,H,N,P)) and x is (B,1,D)."""
+    b_sz, t, _ = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    pdim = cfg.ssm_head_dim
+    z = jnp.einsum("btd,de->bte", x, p["w_z"])
+    xs = jnp.einsum("btd,de->bte", x, p["w_x"])
+    bb = jnp.einsum("btd,dn->btn", x, p["w_b"])
+    cc = jnp.einsum("btd,dn->btn", x, p["w_c"])
+    dt = jnp.einsum("btd,dh->bth", x.astype(jnp.float32), p["w_dt"])
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    conv_in = jnp.concatenate([xs, bb.astype(xs.dtype), cc.astype(xs.dtype)], -1)
+    if state is None:
+        conv_out = causal_conv(conv_in, p["conv_w"], p["conv_b"])
+        new_conv_state = conv_in[:, -(cfg.ssm_conv - 1) :, :] if t >= cfg.ssm_conv - 1 else None
+    else:
+        conv_state, ssd_state = state
+        window = jnp.concatenate([conv_state, conv_in], axis=1)  # (B,W,C)
+        conv_out = jnp.einsum(
+            "bwc,wc->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32)
+        )[:, None, :] + p["conv_b"].astype(jnp.float32)
+        conv_out = conv_out.astype(conv_in.dtype)
+        new_conv_state = window[:, 1:, :]
+    conv_out = jax.nn.silu(conv_out)
+    xs2 = conv_out[..., :di].reshape(b_sz, t, h, pdim)
+    bb2 = conv_out[..., di : di + n]
+    cc2 = conv_out[..., di + n :]
+
+    if state is None:
+        y, final_state = ssd_chunked(
+            xs2, dt, a, bb2, cc2, chunk=cfg.ssm_chunk
+        )
+    else:
+        _, ssd_state = state
+        decay = jnp.exp(dt[:, 0, :] * a)  # (B,H)
+        upd = jnp.einsum(
+            "bn,bh,bhv->bhnv", bb2[:, 0].astype(jnp.float32),
+            dt[:, 0, :], xs2[:, 0].astype(jnp.float32),
+        )
+        final_state = decay[:, :, None, None] * ssd_state + upd
+        y = jnp.einsum("bn,bhnv->bhv", cc2[:, 0].astype(jnp.float32), final_state)
+        y = y[:, None].astype(x.dtype)  # (B,1,H,P)
+        y = y.reshape(b_sz, 1, h, pdim)
+
+    y = y + xs2 * p["d_skip"][:, None].astype(y.dtype).reshape(1, 1, h, 1)
+    y = y.reshape(b_sz, t, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"])
+    if state is None:
+        # training/prefill returns the final SSD state + conv tail for decode
+        tail = conv_in[:, -(cfg.ssm_conv - 1) :, :]
+        if t < cfg.ssm_conv - 1:
+            tail = jnp.pad(conv_in, ((0, 0), (cfg.ssm_conv - 1 - t, 0), (0, 0)))
+        return out, (tail, final_state)
+    return out, (new_conv_state, final_state)

@@ -1,0 +1,662 @@
+"""Model assembly: one ``Model`` facade per architecture family.
+
+Families:
+  dense / moe / vlm -> decoder-only transformer (GQA, RoPE, SwiGLU, optional
+                       MoE every layer, optional stubbed vision prefix)
+  ssm               -> Mamba-2 stack (attention-free)
+  hybrid            -> Mamba-2 stack + one shared attention block applied
+                       every ``shared_attn_every`` layers (zamba2-style)
+  encdec            -> whisper backbone: bidirectional encoder over stubbed
+                       frame embeddings + causal decoder with cross-attention
+
+All layer stacks run under ``jax.lax.scan`` over stacked parameters so the
+HLO (and compile time) stays O(1) in depth; remat is per-layer with the
+``dots_with_no_batch_dims_saveable`` policy.
+
+API (all pure functions of (params, batch)):
+  init(key) -> params            axes() -> logical-axis tree
+  loss(params, batch) -> scalar  (train_step target)
+  prefill(params, batch) -> (last_logits, cache)
+  decode_step(params, cache, tokens, pos) -> (logits, cache)
+  init_cache(batch_size, max_len) -> cache ShapeDtypeStructs (for dry-run)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models.config import ModelConfig
+
+REMAT_POLICY = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+
+
+def _split_tree(key, n):
+    return list(jax.random.split(key, n))
+
+
+def _stacked_init(key, n_layers, init_fn):
+    """vmap an init over layers -> stacked params + per-leaf axes."""
+    keys = jax.random.split(key, n_layers)
+    p0, axes = init_fn(keys[0])
+    stacked = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    axes = jax.tree.map(lambda a: ("layers",) + a, axes,
+                        is_leaf=lambda a: isinstance(a, tuple))
+    return stacked, axes
+
+
+def _ce_loss(logits, labels):
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# =====================================================================
+# decoder-only transformer (dense / moe / vlm)
+# =====================================================================
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self._axes = None
+
+    # ---- init ----------------------------------------------------------
+    def _init_layer(self, key):
+        cfg = self.cfg
+        ks = _split_tree(key, 4)
+        attn_p, attn_a = L.init_attention(ks[0], cfg)
+        if cfg.n_experts:
+            mlp_p, mlp_a = L.init_moe(ks[1], cfg)
+        else:
+            mlp_p, mlp_a = L.init_mlp(ks[1], cfg)
+        p = {
+            "attn": attn_p,
+            "mlp": mlp_p,
+            "ln1": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+            "ln2": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+        }
+        a = {"attn": attn_a, "mlp": mlp_a, "ln1": (None,), "ln2": (None,)}
+        return p, a
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = _split_tree(key, 5)
+        dt = L.dtype_of(cfg)
+        layers_p, layers_a = _stacked_init(ks[0], cfg.n_layers, self._init_layer)
+        p = {
+            "embed": L.normal_init(ks[1], (cfg.vocab, cfg.d_model), 1.0, dt),
+            "layers": layers_p,
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+        }
+        a = {
+            "embed": ("vocab", "embed"),
+            "layers": layers_a,
+            "final_norm": (None,),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = L.normal_init(
+                ks[2], (cfg.d_model, cfg.vocab), cfg.d_model ** -0.5, dt
+            )
+            a["lm_head"] = ("embed", "vocab")
+        if cfg.family == "vlm":
+            p["vis_proj"] = L.normal_init(
+                ks[3], (cfg.vis_embed_dim, cfg.d_model), cfg.vis_embed_dim ** -0.5, dt
+            )
+            a["vis_proj"] = (None, "embed")
+        self._axes = a
+        return p
+
+    def axes(self):
+        if self._axes is None:
+            jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        return self._axes
+
+    # ---- forward -------------------------------------------------------
+    def _layer_fwd(self, p_layer, x, positions, q_block):
+        cfg = self.cfg
+        h, kv = L.attention_apply(
+            p_layer["attn"], L.rmsnorm(x, p_layer["ln1"], cfg.norm_eps), cfg,
+            positions=positions, q_block=q_block,
+        )
+        x = x + h
+        z = L.rmsnorm(x, p_layer["ln2"], cfg.norm_eps)
+        if cfg.n_experts:
+            x = x + L.moe_apply(p_layer["mlp"], z, cfg)
+        else:
+            x = x + L.mlp_apply(p_layer["mlp"], z, cfg.bf16_reduce)
+        return x, kv
+
+    def _trunk(self, params, x, positions, collect_cache=False, q_block=512):
+        cfg = self.cfg
+        fwd = functools.partial(self._layer_fwd, positions=positions, q_block=q_block)
+        axes_layer = (
+            L.strip_layer_axis(self.axes()["layers"]) if cfg.fsdp_gather else None
+        )
+
+        def wrapped(p, h):
+            if axes_layer is not None:
+                p = L.gather_fsdp_weights(p, axes_layer)
+                h = L.pin_activation_batch(h)
+            return fwd(p, h)
+
+        body = (
+            jax.checkpoint(wrapped, policy=REMAT_POLICY) if cfg.remat else wrapped
+        )
+
+        def scan_fn(h, p_layer):
+            h2, kv = body(p_layer, h)
+            return h2, kv if collect_cache else 0
+
+        x, caches = jax.lax.scan(scan_fn, x, params["layers"])
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return x, caches
+
+    def _embed_tokens(self, params, tokens):
+        return jnp.take(params["embed"], tokens, axis=0)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            # gemma-style scaling keeps tied-head logits O(1)
+            return jnp.einsum("btd,dv->btv", x, params["embed"].T) * cfg.d_model ** -0.5
+        return jnp.einsum("btd,dv->btv", x, params["lm_head"])
+
+    def _inputs(self, params, batch):
+        """Token embeddings (plus projected vision prefix for VLM)."""
+        x = self._embed_tokens(params, batch["tokens"])
+        if self.cfg.family == "vlm" and "vis_embeds" in batch:
+            pre = jnp.einsum(
+                "bpe,ed->bpd", batch["vis_embeds"].astype(x.dtype), params["vis_proj"]
+            )
+            x = jnp.concatenate([pre, x], axis=1)
+        return x
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x = self._inputs(params, batch)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        x, _ = self._trunk(params, x, positions)
+        if cfg.family == "vlm" and "vis_embeds" in batch:
+            x = x[:, batch["vis_embeds"].shape[1] :, :]
+        logits = self._logits(params, x)
+        return _ce_loss(logits, batch["labels"])
+
+    def prefill(self, params, batch):
+        x = self._inputs(params, batch)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        x, caches = self._trunk(params, x, positions, collect_cache=True)
+        logits = self._logits(params, x[:, -1:, :])
+        k, v = caches
+        cache = {"k": k, "v": v, "len": jnp.int32(x.shape[1])}
+        return logits, cache
+
+    def init_cache(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.hd())
+        dt = L.dtype_of(cfg)
+        return {
+            "k": jax.ShapeDtypeStruct(shape, dt),
+            "v": jax.ShapeDtypeStruct(shape, dt),
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def decode_step(self, params, cache, tokens, pos=None):
+        """tokens: (B,1); cache k/v: (L,B,S,KV,HD); cache['len'] = #valid."""
+        cfg = self.cfg
+        x = self._embed_tokens(params, tokens)
+        new_len = cache["len"] + 1
+        positions = jnp.broadcast_to(new_len - 1, tokens.shape)
+
+        def scan_fn(h, xs):
+            p_layer, kc, vc = xs
+            hn = L.rmsnorm(h, p_layer["ln1"], cfg.norm_eps)
+            out, (kc2, vc2) = L.attention_apply(
+                p_layer["attn"], hn, cfg, positions=positions,
+                kv_cache=(kc, vc), cache_len=new_len,
+            )
+            h = h + out
+            z = L.rmsnorm(h, p_layer["ln2"], cfg.norm_eps)
+            if cfg.n_experts:
+                h = h + L.moe_apply(p_layer["mlp"], z, cfg)
+            else:
+                h = h + L.mlp_apply(p_layer["mlp"], z)
+            return h, (kc2, vc2)
+
+        x, (k2, v2) = jax.lax.scan(
+            scan_fn, x, (params["layers"], cache["k"], cache["v"])
+        )
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x)
+        return logits, {"k": k2, "v": v2, "len": new_len}
+
+
+# =====================================================================
+# Mamba-2 stack (ssm) and zamba2-style hybrid
+# =====================================================================
+
+class MambaLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self._axes = None
+        self.hybrid = cfg.family == "hybrid"
+        if self.hybrid:
+            self.n_apps = cfg.n_layers // cfg.shared_attn_every
+
+    def _init_layer(self, key):
+        cfg = self.cfg
+        p, a = M.init_mamba_block(key, cfg)
+        p = {"block": p, "ln": jnp.ones((cfg.d_model,), L.dtype_of(cfg))}
+        a = {"block": a, "ln": (None,)}
+        return p, a
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = _split_tree(key, 6)
+        dt = L.dtype_of(cfg)
+        layers_p, layers_a = _stacked_init(ks[0], cfg.n_layers, self._init_layer)
+        p = {
+            "embed": L.normal_init(ks[1], (cfg.vocab, cfg.d_model), 1.0, dt),
+            "layers": layers_p,
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+            "lm_head": L.normal_init(
+                ks[2], (cfg.d_model, cfg.vocab), cfg.d_model ** -0.5, dt
+            ),
+        }
+        a = {
+            "embed": ("vocab", "embed"),
+            "layers": layers_a,
+            "final_norm": (None,),
+            "lm_head": ("embed", "vocab"),
+        }
+        if self.hybrid:
+            attn_p, attn_a = L.init_attention(ks[3], cfg)
+            mlp_p, mlp_a = L.init_mlp(ks[4], cfg)
+            p["shared"] = {
+                "attn": attn_p, "mlp": mlp_p,
+                "ln1": jnp.ones((cfg.d_model,), dt),
+                "ln2": jnp.ones((cfg.d_model,), dt),
+            }
+            a["shared"] = {"attn": attn_a, "mlp": mlp_a, "ln1": (None,), "ln2": (None,)}
+        self._axes = a
+        return p
+
+    def axes(self):
+        if self._axes is None:
+            jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        return self._axes
+
+    # ---- forward --------------------------------------------------------
+    def _shared_attn(self, params, x, positions, cache=None, cache_len=None):
+        cfg = self.cfg
+        sp = params["shared"]
+        h, kv = L.attention_apply(
+            sp["attn"], L.rmsnorm(x, sp["ln1"], cfg.norm_eps), cfg,
+            positions=positions, kv_cache=cache, cache_len=cache_len,
+        )
+        x = x + h
+        x = x + L.mlp_apply(sp["mlp"], L.rmsnorm(x, sp["ln2"], cfg.norm_eps))
+        return x, kv
+
+    def _trunk(self, params, x, positions, collect_state=False):
+        cfg = self.cfg
+        every = cfg.shared_attn_every
+
+        def layer_fwd(p_layer, h):
+            z = L.rmsnorm(h, p_layer["ln"], cfg.norm_eps)
+            out, state = M.mamba_apply(p_layer["block"], z, cfg)
+            return h + out, state
+
+        body = (
+            jax.checkpoint(layer_fwd, policy=REMAT_POLICY)
+            if cfg.remat else layer_fwd
+        )
+
+        if not self.hybrid:
+            def scan_fn(h, p_layer):
+                h2, state = body(p_layer, h)
+                return h2, state if collect_state else 0
+            x, states = jax.lax.scan(scan_fn, x, params["layers"])
+            x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+            return x, states, None
+
+        # hybrid: shared attention applied every ``every`` layers.  The
+        # attention caches for all applications are collected outside scan.
+        def scan_fn(carry, xs):
+            h, app_kv_k, app_kv_v, li = carry
+            p_layer = xs
+            h2, state = body(p_layer, h)
+            is_attn = (li % every) == (every - 1)
+            app = li // every
+
+            def with_attn(h_in):
+                h3, (k, v) = self._shared_attn(params, h_in, positions)
+                kk = jax.lax.dynamic_update_index_in_dim(app_kv_k, k, app, 0)
+                vv = jax.lax.dynamic_update_index_in_dim(app_kv_v, v, app, 0)
+                return h3, kk, vv
+
+            def without(h_in):
+                return h_in, app_kv_k, app_kv_v
+
+            h2, app_kv_k, app_kv_v = jax.lax.cond(is_attn, with_attn, without, h2)
+            return (h2, app_kv_k, app_kv_v, li + 1), (state if collect_state else 0)
+
+        b, t = x.shape[:2]
+        kv_shape = (self.n_apps, b, t, cfg.n_kv_heads, cfg.hd())
+        k0 = jnp.zeros(kv_shape, L.dtype_of(cfg))
+        v0 = jnp.zeros(kv_shape, L.dtype_of(cfg))
+        (x, ak, av, _), states = jax.lax.scan(
+            scan_fn, (x, k0, v0, jnp.int32(0)), params["layers"]
+        )
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return x, states, (ak, av)
+
+    def loss(self, params, batch):
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        x, _, _ = self._trunk(params, x, positions)
+        logits = jnp.einsum("btd,dv->btv", x, params["lm_head"])
+        return _ce_loss(logits, batch["labels"])
+
+    def prefill(self, params, batch):
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        x, states, attn_kv = self._trunk(params, x, positions, collect_state=True)
+        logits = jnp.einsum("btd,dv->btv", x[:, -1:, :], params["lm_head"])
+        conv, ssd = states
+        cache = {"conv": conv, "ssd": ssd, "len": jnp.int32(x.shape[1])}
+        if self.hybrid:
+            cache["ak"], cache["av"] = attn_kv
+        return logits, cache
+
+    def init_cache(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        dt = L.dtype_of(cfg)
+        ch = cfg.d_inner + 2 * cfg.ssm_state
+        cache = {
+            "conv": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch_size, cfg.ssm_conv - 1, ch), dt
+            ),
+            "ssd": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch_size, cfg.ssm_nheads, cfg.ssm_state,
+                 cfg.ssm_head_dim), jnp.float32,
+            ),
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        if self.hybrid:
+            kv = (self.n_apps, batch_size, max_len, cfg.n_kv_heads, cfg.hd())
+            cache["ak"] = jax.ShapeDtypeStruct(kv, dt)
+            cache["av"] = jax.ShapeDtypeStruct(kv, dt)
+        return cache
+
+    def decode_step(self, params, cache, tokens, pos=None):
+        cfg = self.cfg
+        every = cfg.shared_attn_every
+        x = jnp.take(params["embed"], tokens, axis=0)
+        new_len = cache["len"] + 1
+        positions = jnp.broadcast_to(new_len - 1, tokens.shape)
+
+        if not self.hybrid:
+            def scan_fn(h, xs):
+                p_layer, conv, ssd = xs
+                z = L.rmsnorm(h, p_layer["ln"], cfg.norm_eps)
+                out, (c2, s2) = M.mamba_apply(
+                    p_layer["block"], z, cfg, state=(conv, ssd)
+                )
+                return h + out, (c2, s2)
+
+            x, (c2, s2) = jax.lax.scan(
+                scan_fn, x, (params["layers"], cache["conv"], cache["ssd"])
+            )
+            x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+            logits = jnp.einsum("btd,dv->btv", x, params["lm_head"])
+            return logits, {"conv": c2, "ssd": s2, "len": new_len}
+
+        def scan_fn(carry, xs):
+            h, ak, av, li = carry
+            p_layer, conv, ssd = xs
+            z = L.rmsnorm(h, p_layer["ln"], cfg.norm_eps)
+            out, (c2, s2) = M.mamba_apply(p_layer["block"], z, cfg, state=(conv, ssd))
+            h = h + out
+            is_attn = (li % every) == (every - 1)
+            app = li // every
+
+            def with_attn(h_in):
+                kc = jax.lax.dynamic_index_in_dim(ak, app, 0, keepdims=False)
+                vc = jax.lax.dynamic_index_in_dim(av, app, 0, keepdims=False)
+                h3, (k2, v2) = self._shared_attn(
+                    params, h_in, positions, cache=(kc, vc), cache_len=new_len
+                )
+                return (
+                    h3,
+                    jax.lax.dynamic_update_index_in_dim(ak, k2, app, 0),
+                    jax.lax.dynamic_update_index_in_dim(av, v2, app, 0),
+                )
+
+            h, ak2, av2 = jax.lax.cond(
+                is_attn, with_attn, lambda h_in: (h_in, ak, av), h
+            )
+            return (h, ak2, av2, li + 1), (c2, s2)
+
+        (x, ak, av, _), (c2, s2) = jax.lax.scan(
+            scan_fn,
+            (x, cache["ak"], cache["av"], jnp.int32(0)),
+            (params["layers"], cache["conv"], cache["ssd"]),
+        )
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("btd,dv->btv", x, params["lm_head"])
+        return logits, {
+            "conv": c2, "ssd": s2, "ak": ak, "av": av, "len": new_len
+        }
+
+
+# =====================================================================
+# whisper-style encoder-decoder
+# =====================================================================
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self._axes = None
+
+    def _init_enc_layer(self, key):
+        cfg = self.cfg
+        ks = _split_tree(key, 2)
+        attn_p, attn_a = L.init_attention(ks[0], cfg)
+        mlp_p, mlp_a = L.init_mlp(ks[1], cfg, gated=False)
+        p = {"attn": attn_p, "mlp": mlp_p,
+             "ln1": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+             "ln2": jnp.ones((cfg.d_model,), L.dtype_of(cfg))}
+        a = {"attn": attn_a, "mlp": mlp_a, "ln1": (None,), "ln2": (None,)}
+        return p, a
+
+    def _init_dec_layer(self, key):
+        cfg = self.cfg
+        ks = _split_tree(key, 3)
+        self_p, self_a = L.init_attention(ks[0], cfg)
+        cross_p, cross_a = L.init_attention(ks[1], cfg)
+        mlp_p, mlp_a = L.init_mlp(ks[2], cfg, gated=False)
+        p = {"self": self_p, "cross": cross_p, "mlp": mlp_p,
+             "ln1": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+             "ln2": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+             "ln3": jnp.ones((cfg.d_model,), L.dtype_of(cfg))}
+        a = {"self": self_a, "cross": cross_a, "mlp": mlp_a,
+             "ln1": (None,), "ln2": (None,), "ln3": (None,)}
+        return p, a
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = _split_tree(key, 5)
+        dt = L.dtype_of(cfg)
+        enc_p, enc_a = _stacked_init(ks[0], cfg.enc_layers, self._init_enc_layer)
+        dec_p, dec_a = _stacked_init(ks[1], cfg.n_layers, self._init_dec_layer)
+        p = {
+            "embed": L.normal_init(ks[2], (cfg.vocab, cfg.d_model), 1.0, dt),
+            "enc_layers": enc_p,
+            "dec_layers": dec_p,
+            "enc_norm": jnp.ones((cfg.d_model,), dt),
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+        }
+        a = {
+            "embed": ("vocab", "embed"),
+            "enc_layers": enc_a,
+            "dec_layers": dec_a,
+            "enc_norm": (None,),
+            "final_norm": (None,),
+        }
+        self._axes = a
+        return p
+
+    def axes(self):
+        if self._axes is None:
+            jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        return self._axes
+
+    def _encode(self, params, frames):
+        """frames: (B, T_enc, d_model) stubbed frame embeddings."""
+        cfg = self.cfg
+        x = frames.astype(L.dtype_of(cfg))
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+        def fwd(p_layer, h):
+            z = L.rmsnorm(h, p_layer["ln1"], cfg.norm_eps)
+            q, k, v = L._qkv(p_layer["attn"], z, cfg)
+            q = L.rope(q, positions, cfg.rope_theta)
+            k = L.rope(k, positions, cfg.rope_theta)
+            # bidirectional: full attention, no mask
+            kvh, hd = cfg.n_kv_heads, cfg.hd()
+            qr = q.reshape(*q.shape[:2], kvh, cfg.n_heads // kvh, hd)
+            s = L._gqa_scores_block(qr, k, hd ** -0.5)
+            w = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bkgts,bskh->btkgh", w.astype(v.dtype), v)
+            o = o.reshape(*q.shape[:2], cfg.n_heads * hd)
+            h = h + jnp.einsum("btf,fd->btd", o, p_layer["attn"]["wo"])
+            h = h + L.mlp_apply(p_layer["mlp"], L.rmsnorm(h, p_layer["ln2"], cfg.norm_eps))
+            return h, 0
+
+        body = jax.checkpoint(fwd, policy=REMAT_POLICY) if cfg.remat else fwd
+        x, _ = jax.lax.scan(lambda h, pl: body(pl, h), x, params["enc_layers"])
+        return L.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+    def _cross_kv(self, params, enc_out):
+        """Precompute per-layer cross-attention K/V from encoder output."""
+        cfg = self.cfg
+        def one(p_layer):
+            _, k, v = L._qkv(p_layer["cross"], enc_out, cfg)
+            return k, v
+        return jax.vmap(one)(params["dec_layers"])  # stacked (L, B, S, KV, HD)
+
+    def _dec_layer(self, p_layer, h, positions, cross_k, cross_v,
+                   kv_cache=None, cache_len=None):
+        cfg = self.cfg
+        out, kv = L.attention_apply(
+            p_layer["self"], L.rmsnorm(h, p_layer["ln1"], cfg.norm_eps), cfg,
+            positions=positions, kv_cache=kv_cache, cache_len=cache_len,
+        )
+        h = h + out
+        # cross attention (keys/values fixed, no causal mask)
+        z = L.rmsnorm(h, p_layer["ln2"], cfg.norm_eps)
+        kvh, hd = cfg.n_kv_heads, cfg.hd()
+        q = jnp.einsum("btd,dh->bth", z, p_layer["cross"]["wq"])
+        if cfg.qkv_bias:
+            q = q + p_layer["cross"]["bq"]
+        q = q.reshape(*z.shape[:2], kvh, cfg.n_heads // kvh, hd)
+        s = L._gqa_scores_block(q, cross_k, hd ** -0.5)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgts,bskh->btkgh", w.astype(cross_v.dtype), cross_v)
+        o = o.reshape(*z.shape[:2], cfg.n_heads * hd)
+        h = h + jnp.einsum("btf,fd->btd", o, p_layer["cross"]["wo"])
+        h = h + L.mlp_apply(
+            p_layer["mlp"], L.rmsnorm(h, p_layer["ln3"], cfg.norm_eps)
+        )
+        return h, kv
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        enc_out = self._encode(params, batch["frames"])
+        ck, cv = self._cross_kv(params, enc_out)
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+        def fwd(xs, h):
+            p_layer, k, v = xs
+            return self._dec_layer(p_layer, h, positions, k, v)
+
+        body = jax.checkpoint(fwd, policy=REMAT_POLICY) if cfg.remat else fwd
+        x, _ = jax.lax.scan(
+            lambda h, xs: body(xs, h), x, (params["dec_layers"], ck, cv)
+        )
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("btd,dv->btv", x, params["embed"].T) * cfg.d_model ** -0.5
+        return _ce_loss(logits, batch["labels"])
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        enc_out = self._encode(params, batch["frames"])
+        ck, cv = self._cross_kv(params, enc_out)
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+        def fwd(h, xs):
+            p_layer, k, v = xs
+            h2, kv = self._dec_layer(p_layer, h, positions, k, v)
+            return h2, kv
+
+        x, (sk, sv) = jax.lax.scan(fwd, x, (params["dec_layers"], ck, cv))
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("btd,dv->btv", x[:, -1:, :], params["embed"].T) * cfg.d_model ** -0.5
+        return logits, {"k": sk, "v": sv, "ck": ck, "cv": cv,
+                        "len": jnp.int32(x.shape[1])}
+
+    def init_cache(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        dt = L.dtype_of(cfg)
+        kv = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.hd())
+        ckv = (cfg.n_layers, batch_size, cfg.enc_len, cfg.n_kv_heads, cfg.hd())
+        return {
+            "k": jax.ShapeDtypeStruct(kv, dt),
+            "v": jax.ShapeDtypeStruct(kv, dt),
+            "ck": jax.ShapeDtypeStruct(ckv, dt),
+            "cv": jax.ShapeDtypeStruct(ckv, dt),
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def decode_step(self, params, cache, tokens, pos=None):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        new_len = cache["len"] + 1
+        positions = jnp.broadcast_to(new_len - 1, tokens.shape)
+
+        def fwd(h, xs):
+            p_layer, kc, vc, ck, cv = xs
+            h2, (k2, v2) = self._dec_layer(
+                p_layer, h, positions, ck, cv,
+                kv_cache=(kc, vc), cache_len=new_len,
+            )
+            return h2, (k2, v2)
+
+        x, (k2, v2) = jax.lax.scan(
+            fwd, x,
+            (params["dec_layers"], cache["k"], cache["v"], cache["ck"], cache["cv"]),
+        )
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("btd,dv->btv", x, params["embed"].T) * cfg.d_model ** -0.5
+        return logits, {"k": k2, "v": v2, "ck": cache["ck"], "cv": cache["cv"],
+                        "len": new_len}
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return TransformerLM(cfg)
+    if cfg.family in ("ssm",):
+        return MambaLM(cfg)
+    if cfg.family == "hybrid":
+        return MambaLM(cfg)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,64 @@
+"""Train / serve step functions (the jit roots for the dry-run and drivers).
+
+``make_train_step``  -> (params, opt_state, batch) -> (params, opt_state, metrics)
+``make_prefill_step``-> (params, batch) -> (logits, cache)
+``make_decode_step`` -> (params, cache, tokens) -> (logits, cache)
+
+Sharding is supplied by the caller as in/out_shardings on jax.jit; the step
+functions are pure and mesh-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import compression as comp
+from repro.models.model import build_model
+from repro.optim import adamw
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig):
+    model = build_model(cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        if opt_cfg.compression != "none":
+            grads, new_resid = comp.apply_compression(
+                grads, opt_state["residual"], opt_cfg.compression
+            )
+        new_params, new_opt, metrics = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state
+        )
+        if opt_cfg.compression != "none":
+            new_opt["residual"] = new_resid
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return model, train_step
+
+
+def init_opt_state(model, params, opt_cfg: adamw.AdamWConfig):
+    st = adamw.init_state(params)
+    if opt_cfg.compression != "none":
+        st["residual"] = comp.init_residual(params)
+    return st
+
+
+def make_prefill_step(cfg):
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return model, prefill_step
+
+
+def make_decode_step(cfg):
+    model = build_model(cfg)
+
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return model, decode_step

@@ -1,0 +1,98 @@
+"""Group-based data layout invariants (paper §3.2)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.group_layout import CompactStripeTable, stripe_id_dtype
+from repro.core.array import ZapRaidConfig, ZapRAIDArray
+from repro.core.zns import ZnsConfig
+
+
+@given(st.integers(2, 65536))
+@settings(max_examples=60, deadline=None)
+def test_stripe_id_byte_rounding(g):
+    """Stripe IDs are byte-rounded exactly as the paper's prototype."""
+    bits = max(1, math.ceil(math.log2(g)))
+    nbytes = -(-bits // 8)
+    assert stripe_id_dtype(g).itemsize == min(nbytes, 4) or nbytes > 4
+
+
+def test_cst_memory_formula():
+    """max memory = (k+m) * S * bytes_per_id (paper's formula, byte-rounded)."""
+    for g, expected_itemsize in [(4, 1), (256, 1), (257, 2), (4096, 2)]:
+        cst = CompactStripeTable(n_drives=4, n_stripes=1000, group_size=g)
+        assert cst.memory_bytes() == 4 * 1000 * expected_itemsize
+
+
+def test_degraded_query_bound_is_k_times_g():
+    """A degraded read touches at most k*G CST entries (paper §3.2)."""
+    g = 8
+    cfg = ZapRaidConfig(scheme="raid5", n_drives=4, group_size=g,
+                        chunk_blocks=1, logical_blocks=128,
+                        gc_free_segments_low=1)
+    zns = ZnsConfig(n_zones=8, zone_cap_blocks=64, block_bytes=256)
+    arr = ZapRAIDArray(cfg, zns)
+    rng = np.random.default_rng(0)
+    for lba in range(30):
+        arr.write(lba, rng.integers(0, 256, (1, 256), dtype=np.uint8))
+    arr.flush()
+    arr.fail_drive(0)
+    # pick an LBA whose block lives on the failed drive (forces decode)
+    from repro.core.l2p import unpack_pba
+    lba = next(
+        l for l in range(30) if unpack_pba(arr.l2p.get(l))[1] == 0
+    )
+    rec = next(iter(arr.segments.values()))
+    cst = rec.cst
+    before = cst.entries_accessed
+    arr.read(lba, 1)
+    accessed = cst.entries_accessed - before
+    k = 3
+    assert 0 < accessed <= (k + 1) * g + 1  # k survivors searched + own entry
+
+
+def test_out_of_order_placement_is_absorbed():
+    """Chunks of one stripe land at different offsets across zones under the
+    shuffled Zone-Append commit, yet reads resolve correctly."""
+    cfg = ZapRaidConfig(scheme="raid5", n_drives=4, group_size=8,
+                        chunk_blocks=1, logical_blocks=128,
+                        gc_free_segments_low=1, append_seed=7)
+    zns = ZnsConfig(n_zones=8, zone_cap_blocks=64, block_bytes=256)
+    arr = ZapRAIDArray(cfg, zns)
+    rng = np.random.default_rng(1)
+    ref = {}
+    for lba in range(24):
+        blk = rng.integers(0, 256, (1, 256), dtype=np.uint8)
+        arr.write(lba, blk)
+        ref[lba] = blk[0]
+    arr.flush()
+    rec = next(iter(arr.segments.values()))
+    table = rec.cst.table[:, :8]  # first group
+    # at least one drive must have a different stripe order than drive 0
+    assert any(
+        not np.array_equal(table[0], table[d]) for d in range(1, 4)
+    ), "shuffle produced fully-aligned placement (seed too tame?)"
+    assert all(np.array_equal(arr.read(l, 1)[0], v) for l, v in ref.items())
+
+
+def test_g1_degenerates_to_zone_write():
+    """G=1 must use the Zone Write path: no CST allocated."""
+    cfg = ZapRaidConfig(scheme="raid5", n_drives=4, group_size=1,
+                        chunk_blocks=1, logical_blocks=128,
+                        gc_free_segments_low=1)
+    zns = ZnsConfig(n_zones=8, zone_cap_blocks=64, block_bytes=256)
+    arr = ZapRAIDArray(cfg, zns)
+    rng = np.random.default_rng(2)
+    ref = {}
+    for lba in range(16):
+        blk = rng.integers(0, 256, (1, 256), dtype=np.uint8)
+        arr.write(lba, blk)
+        ref[lba] = blk[0]
+    arr.flush()
+    rec = next(iter(arr.segments.values()))
+    assert rec.cst is None
+    # static mapping: same stripe -> same offset on every drive
+    arr.fail_drive(3)
+    assert all(np.array_equal(arr.read(l, 1)[0], v) for l, v in ref.items())

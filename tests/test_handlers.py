@@ -1,0 +1,32 @@
+"""SPDK-style pipeline facade: event routing + completion callbacks."""
+import numpy as np
+
+from repro.core.array import ZapRaidConfig, ZapRAIDArray
+from repro.core.handlers import HandlerPipeline
+from repro.core.zns import ZnsConfig
+
+
+def test_pipeline_write_read_roundtrip():
+    cfg = ZapRaidConfig(scheme="raid5", n_drives=4, group_size=4,
+                        chunk_blocks=1, logical_blocks=128,
+                        gc_free_segments_low=1)
+    zns = ZnsConfig(n_zones=8, zone_cap_blocks=64, block_bytes=256)
+    pipe = HandlerPipeline(ZapRAIDArray(cfg, zns))
+    rng = np.random.default_rng(0)
+    ref = {}
+    acks = []
+    for lba in range(24):
+        blk = rng.integers(0, 256, (1, 256), dtype=np.uint8)
+        ref[lba] = blk[0].copy()
+        pipe.submit_write(lba, blk, cb=acks.append)
+    pipe.drain()
+    assert len(acks) == 24
+
+    got = {}
+    for lba in range(24):
+        pipe.submit_read(lba, 1, cb=lambda out, l=lba: got.__setitem__(l, out[0]))
+    pipe.drain()
+    assert all(np.array_equal(got[l], v) for l, v in ref.items())
+    assert pipe.counters["dispatch"] == 48
+    assert pipe.counters["device_io"] >= 24
+    assert pipe.counters["segment_state"] >= 1

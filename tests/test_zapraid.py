@@ -1,0 +1,267 @@
+"""System behaviour tests for the ZapRAID storage core: writes, reads,
+degraded reads, full-drive recovery, crash consistency, GC, hybrid data
+management, and L2P offloading -- including a hypothesis property test that
+random workloads with random crash points never lose acknowledged data."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.array import ZapRaidConfig, ZapRAIDArray
+from repro.core.recovery import recover_array
+from repro.core.segment import solve_stripes_per_segment
+from repro.core.zns import DeviceCrashed, ZnsConfig
+
+BB = 256  # small blocks keep tests fast
+
+
+def mk(scheme="raid5", n_drives=4, G=4, chunk=1, logical=256, zones=12,
+       zone_cap=64, **kw):
+    kw.setdefault("gc_free_segments_low", 1)
+    cfg = ZapRaidConfig(
+        scheme=scheme, n_drives=n_drives, group_size=G, chunk_blocks=chunk,
+        logical_blocks=logical, **kw,
+    )
+    zns = ZnsConfig(n_zones=zones, zone_cap_blocks=zone_cap, block_bytes=BB)
+    return ZapRAIDArray(cfg, zns), cfg, zns
+
+
+def fill(arr, rng, n_writes, logical, ref=None, max_len=1):
+    ref = {} if ref is None else ref
+    for _ in range(n_writes):
+        n = int(rng.integers(1, max_len + 1))
+        lba = int(rng.integers(0, logical - n))
+        blk = rng.integers(0, 256, size=(n, BB), dtype=np.uint8)
+        arr.write(lba, blk)
+        for j in range(n):
+            ref[lba + j] = blk[j].copy()
+    arr.flush()
+    return ref
+
+
+def check(arr, ref):
+    return all(np.array_equal(arr.read(l, 1)[0], v) for l, v in ref.items())
+
+
+# ------------------------------------------------------------ layout math
+
+def test_paper_layout_arithmetic():
+    """§3.1 example: ZN540 zone = 275,712 blocks, C=1 -> header 1, data
+    274,366, footer 1,345."""
+    s, foot = solve_stripes_per_segment(275712, 1, 4096)
+    assert s == 274366
+    assert foot == 1345
+    assert 1 + s + foot == 275712
+
+
+def test_small_zone_layout():
+    """§3.6: 96 MiB zone (24,576 blocks), C=1 -> data 24,455, footer 120."""
+    s, foot = solve_stripes_per_segment(24576, 1, 4096)
+    assert 1 + s + foot <= 24576
+    assert s == 24455 and foot == 120
+
+
+# ------------------------------------------------------------- basic paths
+
+@pytest.mark.parametrize("scheme", ["raid0", "raid01", "raid4", "raid5", "raid6"])
+def test_write_read_all_schemes(scheme):
+    rng = np.random.default_rng(1)
+    arr, *_ = mk(scheme=scheme)
+    ref = fill(arr, rng, 150, 256)
+    assert check(arr, ref)
+
+
+@pytest.mark.parametrize("scheme", ["raid01", "raid4", "raid5", "raid6"])
+def test_degraded_read_single_failure(scheme):
+    rng = np.random.default_rng(2)
+    arr, *_ = mk(scheme=scheme)
+    ref = fill(arr, rng, 150, 256)
+    # raid01: data lives on drives 0..k-1, mirrors on k..; fail a data drive
+    arr.fail_drive(0 if scheme == "raid01" else 2)
+    assert check(arr, ref)
+    assert arr.stats.degraded_reads > 0
+
+
+def test_raid6_double_failure_and_rebuild():
+    rng = np.random.default_rng(3)
+    arr, *_ = mk(scheme="raid6")
+    ref = fill(arr, rng, 150, 128, max_len=2)
+    arr.fail_drive(0)
+    arr.fail_drive(2)
+    assert check(arr, ref)
+    arr.rebuild_drive(0)
+    arr.rebuild_drive(2)
+    assert check(arr, ref)
+    before = arr.stats.degraded_reads
+    assert check(arr, ref)
+    assert arr.stats.degraded_reads == before  # no degraded reads post-rebuild
+
+
+def test_full_drive_recovery_then_crash_recovery():
+    rng = np.random.default_rng(4)
+    arr, cfg, zns = mk()
+    ref = fill(arr, rng, 200, 256)
+    arr.fail_drive(1)
+    arr.rebuild_drive(1)
+    arr2 = recover_array(arr.drives, cfg, zns)
+    assert check(arr2, ref)
+
+
+def test_overwrite_semantics_across_classes():
+    """A later write must win even when an earlier write of the same LBA is
+    still buffered in a Zone-Append group (issue-order vs commit-order)."""
+    rng = np.random.default_rng(5)
+    arr, *_ = mk(G=8, hybrid=True, n_small=2, n_large=2,
+                 small_chunk_blocks=1, large_chunk_blocks=2)
+    a = rng.integers(0, 256, (1, BB), dtype=np.uint8)
+    b = rng.integers(0, 256, (2, BB), dtype=np.uint8)
+    arr.write(7, a)       # small -> append group (buffered)
+    arr.write(7, b[:1])   # another small write, same LBA: supersedes
+    arr.write(2, b)       # unrelated large write
+    arr.flush()
+    assert np.array_equal(arr.read(7, 1)[0], b[0])
+    assert np.array_equal(arr.read(2, 1)[0], b[0])
+    assert np.array_equal(arr.read(3, 1)[0], b[1])
+
+
+# ------------------------------------------------------------------ crash
+
+def test_crash_never_loses_acked_data():
+    rng = np.random.default_rng(6)
+    arr, cfg, zns = mk(G=4)
+    acked = {}
+    for i in range(40):
+        lba = int(rng.integers(0, 200))
+        blk = rng.integers(0, 256, (1, BB), dtype=np.uint8)
+        arr.write(lba, blk)
+        arr.flush()
+        acked[lba] = blk[0].copy()
+    arr.arm_crash(int(rng.integers(1, 12)))
+    try:
+        for i in range(40):
+            lba = int(rng.integers(0, 200))
+            blk = rng.integers(0, 256, (1, BB), dtype=np.uint8)
+            arr.write(lba, blk)
+            arr.flush()
+            acked[lba] = blk[0].copy()
+    except DeviceCrashed:
+        acked.pop(lba, None)  # the in-flight write was never acknowledged
+    arr2 = recover_array(arr.drives, cfg, zns)
+    assert check(arr2, acked)
+
+
+@given(st.integers(0, 10_000), st.integers(1, 40))
+@settings(max_examples=12, deadline=None)
+def test_crash_property(seed, budget):
+    """Property: for any workload and any crash point, acknowledged writes
+    survive recovery and the array stays writable afterwards."""
+    rng = np.random.default_rng(seed)
+    arr, cfg, zns = mk(G=4, zones=16)
+    acked = {}
+    crashed = False
+    lba = 0
+    for i in range(30):
+        if i == 10:
+            arr.arm_crash(budget)
+        lba = int(rng.integers(0, 200))
+        blk = rng.integers(0, 256, (1, BB), dtype=np.uint8)
+        try:
+            arr.write(lba, blk)
+            arr.flush()
+        except DeviceCrashed:
+            crashed = True
+            break
+        acked[lba] = blk[0].copy()
+    arr2 = recover_array(arr.drives, cfg, zns)
+    assert check(arr2, acked)
+    # still writable post-recovery
+    blk = rng.integers(0, 256, (1, BB), dtype=np.uint8)
+    arr2.write(3, blk)
+    arr2.flush()
+    assert np.array_equal(arr2.read(3, 1)[0], blk[0])
+
+
+def test_recovery_discards_headerless_segments():
+    """Paper Case 2: a segment with some zones never written is discarded."""
+    rng = np.random.default_rng(7)
+    arr, cfg, zns = mk()
+    ref = fill(arr, rng, 60, 256)
+    # simulate crash exactly during segment creation: new segment with
+    # header on only two drives
+    arr.arm_crash(2)
+    with pytest.raises(DeviceCrashed):
+        arr._open_segment(0, 1, 4)
+    arr2 = recover_array(arr.drives, cfg, zns)
+    assert check(arr2, ref)
+
+
+# ----------------------------------------------------------------- GC
+
+def test_gc_reclaims_and_preserves():
+    rng = np.random.default_rng(8)
+    arr, cfg, zns = mk(logical=96, zones=6, gc_free_segments_low=2)
+    ref = {}
+    for _ in range(1500):
+        lba = int(rng.integers(0, 96))
+        blk = rng.integers(0, 256, (1, BB), dtype=np.uint8)
+        arr.write(lba, blk)
+        ref[lba] = blk[0].copy()
+    arr.flush()
+    assert arr.stats.gc_runs > 0
+    assert check(arr, ref)
+    arr2 = recover_array(arr.drives, cfg, zns)
+    assert check(arr2, ref)
+
+
+# --------------------------------------------------------------- hybrid
+
+def test_hybrid_routing_and_recovery():
+    rng = np.random.default_rng(9)
+    arr, cfg, zns = mk(hybrid=True, n_small=2, n_large=2, G=4,
+                       small_chunk_blocks=1, large_chunk_blocks=2,
+                       zones=16)
+    ref = fill(arr, rng, 400, 256, max_len=3)
+    assert check(arr, ref)
+    small = [arr.open_segments[s] for s in arr.small_ids]
+    large = [arr.open_segments[s] for s in arr.large_ids]
+    assert all(o.info.chunk_blocks == 1 for o in small)
+    assert all(o.info.chunk_blocks == 2 for o in large)
+    assert small[0].info.uses_append and not small[1].info.uses_append
+    arr.fail_drive(1)
+    assert check(arr, ref)
+    arr.rebuild_drive(1)
+    arr2 = recover_array(arr.drives, cfg, zns)
+    assert check(arr2, ref)
+
+
+# ---------------------------------------------------------- L2P offload
+
+def test_l2p_offload_roundtrip_and_recovery():
+    rng = np.random.default_rng(10)
+    arr, cfg, zns = mk(logical=512, zones=24, l2p_memory_limit_entries=128)
+    ref = fill(arr, rng, 900, 512)
+    assert arr.l2p.evictions > 0
+    assert arr.stats.meta_blocks_written > 0
+    assert check(arr, ref)
+    arr2 = recover_array(arr.drives, cfg, zns)
+    assert check(arr2, ref)
+    ref2 = fill(arr2, rng, 200, 512, ref=ref)
+    assert check(arr2, ref2)
+
+
+def test_l2p_memory_accounting():
+    rng = np.random.default_rng(11)
+    arr, *_ = mk(logical=512, zones=24, l2p_memory_limit_entries=128)
+    fill(arr, rng, 600, 512)
+    epg = arr.l2p.epg
+    assert len(arr.l2p.resident) <= max(1, 128 // epg)
+    assert arr.l2p.memory_bytes() <= 128 * 4
+
+
+# ----------------------------------------------------------- accounting
+
+def test_write_amplification_accounting():
+    rng = np.random.default_rng(12)
+    arr, *_ = mk(scheme="raid5")  # k=3, m=1
+    fill(arr, rng, 300, 256)
+    wa = arr.stats.write_amp()
+    assert 4 / 3 - 0.05 <= wa <= 2.5  # parity >= 4/3; padding/meta above that
