@@ -1,0 +1,20 @@
+PYTHONPATH := src
+PY := PYTHONPATH=$(PYTHONPATH) python
+
+.PHONY: test test-fast bench bench-quick
+
+# Tier-1 verify: the whole suite, stop on first failure.
+test:
+	$(PY) -m pytest -x -q
+
+# Skip the slow system/checkpoint suites during iteration.
+test-fast:
+	$(PY) -m pytest -x -q --ignore=tests/test_system.py --ignore=tests/test_checkpoint.py
+
+# Full benchmark sweep; writes BENCH_PR2.json next to the CSV output.
+bench:
+	$(PY) -m benchmarks.run
+
+# Cheap subset with small shapes for CI time budgets.
+bench-quick:
+	$(PY) -m benchmarks.run --quick

@@ -8,16 +8,25 @@ Each benchmark prints CSV rows ``name,us_per_call,derived``:
   performance model (MiB/s, seconds, ...), reproducing the paper's trends
   (the hardware itself is not available here; see DESIGN.md §7).
 
-Run: PYTHONPATH=src python -m benchmarks.run [--only NAME]
+Besides the CSV on stdout, a full run writes a machine-readable JSON file
+(``BENCH_PR2.json``; ``--json PATH`` to override) mapping each benchmark name
+to its measured ``us_per_call`` and ``derived`` figure, so the perf trajectory
+can be tracked across PRs.  ``--quick`` shrinks shapes and iteration counts to
+fit CI time budgets; partial sweeps (``--quick``/``--only``) skip the JSON
+unless ``--json`` is given explicitly, so they never clobber the baseline.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick] [--json PATH]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
 
 ROWS: list[tuple[str, float, str]] = []
+QUICK = False  # set by --quick: small shapes / fewer iterations
 
 
 def emit(name: str, us: float, derived: str):
@@ -276,6 +285,70 @@ def bench_trace():
          f"_gain={100*(zap.throughput_mib_s/zw.throughput_mib_s-1):.0f}%")
 
 
+# ------------------------------------------------------- batched datapath
+
+def bench_e2e_write():
+    """Sequential-write microbenchmark: whole-group fused encode + vectorized
+    staging (``batched=True``, this PR) vs the per-block/per-stripe legacy
+    path, at the paper's default group size G=256 (DESIGN.md §2-3)."""
+    from repro.core.array import ZapRaidConfig, ZapRAIDArray
+    from repro.core.zns import ZnsConfig
+
+    n_blocks = 1024 if QUICK else 2048
+    bb = 512
+    rng = np.random.default_rng(13)
+    data = rng.integers(0, 256, (n_blocks, bb), dtype=np.uint8)
+
+    def run(batched: bool) -> float:
+        cfg = ZapRaidConfig(scheme="raid5", n_drives=4, group_size=256,
+                            chunk_blocks=1, logical_blocks=8192,
+                            gc_free_segments_low=1, batched=batched)
+        zns = ZnsConfig(n_zones=16, zone_cap_blocks=2048, block_bytes=bb)
+        arr = ZapRAIDArray(cfg, zns)
+        t0 = time.perf_counter()
+        arr.write(0, data)
+        arr.flush()
+        return (time.perf_counter() - t0) / n_blocks * 1e6
+
+    run(True)  # warm the jit/XLA caches so both modes pay compile once
+    run(False)
+    us_b = run(True)
+    us_l = run(False)
+    mib_s = bb / us_b * 1e6 / (1 << 20)
+    emit("e2e/seq_write_batched_g256", us_b, f"{mib_s:.0f}MiB/s_sim")
+    emit("e2e/seq_write_legacy_g256", us_l, "per_stripe_encode")
+    emit("e2e/seq_write_speedup_g256", 0.0, f"{us_l / us_b:.1f}x")
+
+
+def bench_kernels_batched():
+    """Group-level kernel dispatch: one fused (S, k, n) call vs S per-stripe
+    calls for XOR parity and GF(256) RS encode."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    s_count = 32 if QUICK else 64
+    n = 4096 if QUICK else 16384
+    rng = np.random.default_rng(14)
+    data = jnp.asarray(
+        rng.integers(0, 2**31, (s_count, 3, n), dtype=np.int64), jnp.int32
+    )
+
+    def per_stripe_xor():
+        for s in range(s_count):
+            ops.xor_parity(data[s]).block_until_ready()
+
+    def per_stripe_rs():
+        for s in range(s_count):
+            ops.rs_encode(data[s], 2).block_until_ready()
+
+    us_b = _timeit(lambda: ops.xor_parity_batch(data).block_until_ready())
+    us_l = _timeit(per_stripe_xor)
+    emit(f"kernels/parity_xor_batch_S{s_count}", us_b, f"{us_l / us_b:.1f}x_vs_loop")
+    us_b = _timeit(lambda: ops.rs_encode_batch(data, 2).block_until_ready())
+    us_l = _timeit(per_stripe_rs)
+    emit(f"kernels/rs_encode_batch_S{s_count}", us_b, f"{us_l / us_b:.1f}x_vs_loop")
+
+
 # ------------------------------------------------------------- kernels
 
 def bench_kernels():
@@ -349,20 +422,51 @@ def bench_straggler():
 ALL = [
     bench_zns_primitives, bench_write, bench_reads, bench_group_size,
     bench_raid_schemes, bench_recovery, bench_hybrid, bench_gc,
-    bench_l2p_offload, bench_trace, bench_kernels, bench_checkpoint,
-    bench_straggler,
+    bench_l2p_offload, bench_trace, bench_e2e_write, bench_kernels_batched,
+    bench_kernels, bench_checkpoint, bench_straggler,
+]
+
+# --quick runs the cheap subset (each well under a minute on CPU)
+QUICK_SET = [
+    bench_zns_primitives, bench_group_size, bench_raid_schemes,
+    bench_e2e_write, bench_kernels_batched, bench_straggler,
 ]
 
 
+def write_json(path: str) -> None:
+    out = {
+        name: {"us_per_call": round(us, 2), "derived": derived}
+        for name, us, derived in ROWS
+    }
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path} ({len(out)} entries)", flush=True)
+
+
 def main() -> None:
+    global QUICK
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes / cheap subset for CI time budgets")
+    ap.add_argument("--json", default=None,
+                    help="machine-readable output path ('' to disable); "
+                         "defaults to BENCH_PR2.json for full runs, and to "
+                         "disabled for --quick/--only runs so partial sweeps "
+                         "never clobber the committed baseline")
     args = ap.parse_args()
+    QUICK = args.quick
+    json_path = args.json
+    if json_path is None:
+        json_path = "" if (args.quick or args.only) else "BENCH_PR2.json"
     print("name,us_per_call,derived")
-    for fn in ALL:
+    for fn in (QUICK_SET if args.quick else ALL):
         if args.only and args.only not in fn.__name__:
             continue
         fn()
+    if json_path:
+        write_json(json_path)
 
 
 if __name__ == "__main__":

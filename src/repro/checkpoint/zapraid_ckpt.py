@@ -74,7 +74,7 @@ class CheckpointConfig:
 
 
 def _flatten_state(state) -> tuple[list[tuple[str, np.ndarray]], Any]:
-    flat, treedef = jax.tree.flatten_with_path(state)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
     out = []
     for path, leaf in flat:
         out.append((jax.tree_util.keystr(path), np.asarray(leaf)))
@@ -168,7 +168,7 @@ class CheckpointEngine:
         if manifest is None:
             raise KeyError(f"no checkpoint for step {step}")
         bb = self.cfg.block_bytes
-        flat, treedef = jax.tree.flatten_with_path(like)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
         out = []
         for path, leaf in flat:
             name = jax.tree_util.keystr(path)

@@ -30,8 +30,15 @@ import numpy as np
 
 from repro.core import segment as seg_mod
 from repro.core.group_layout import CompactStripeTable
-from repro.core.l2p import NO_PBA, L2PTable, pack_pba, unpack_pba
-from repro.core.raid import StripeCodec, decode_meta, make_scheme, parity_oob
+from repro.core.l2p import NO_PBA, L2PTable, pack_pba, unpack_pba, unpack_pba_many
+from repro.core.raid import (
+    StripeCodec,
+    decode_meta,
+    decode_meta_batch,
+    make_scheme,
+    parity_oob,
+    parity_oob_batch,
+)
 from repro.core.segment import (
     SegmentClass,
     SegmentInfo,
@@ -75,6 +82,7 @@ class ZapRaidConfig:
     # datapath
     use_pallas: bool = False
     interpret: bool = True
+    batched: bool = True           # group-level fused encode + vectorized I/O
     append_seed: int = 1234
 
     def chunk_sizes(self) -> list[tuple[int, int]]:
@@ -129,6 +137,20 @@ class _InFlightStripe:
         self.ts[i] = ts
         self.meta_gids[i] = meta_gid
         self.fill += 1
+
+    def add_many(
+        self, lbas: np.ndarray, blocks: np.ndarray, ts: int,
+        meta_gids: Optional[np.ndarray] = None,
+    ) -> None:
+        """Bulk slice-assign a run of blocks (must fit in remaining capacity)."""
+        n = lbas.shape[0]
+        i = self.fill
+        assert i + n <= self.capacity, (i, n, self.capacity)
+        self.blocks[i : i + n] = blocks
+        self.lbas[i : i + n] = lbas
+        self.ts[i : i + n] = ts
+        self.meta_gids[i : i + n] = -1 if meta_gids is None else meta_gids
+        self.fill += n
 
     @property
     def full(self) -> bool:
@@ -314,9 +336,14 @@ class ZapRAIDArray:
         assert data.shape[1] == self.zns_cfg.block_bytes
         assert 0 <= lba and lba + n <= self.cfg.logical_blocks, (lba, n)
         seg_class = self._classify(n)
-        for i in range(n):
-            self._append_block(seg_class, lba + i, data[i], 0)
-            self.stats.host_blocks_written += 1
+        if self.cfg.batched:
+            self._append_blocks(
+                seg_class, np.arange(lba, lba + n, dtype=np.int64), data, 0
+            )
+        else:
+            for i in range(n):
+                self._append_block(seg_class, lba + i, data[i], 0)
+        self.stats.host_blocks_written += n
         self.maybe_gc()
 
     def _classify(self, n_blocks: int) -> int:
@@ -361,6 +388,42 @@ class ZapRAIDArray:
         stripe.add(lba, block, ts, meta_gid)
         if stripe.full:
             self._dispatch_stripe(seg_class)
+
+    def _append_blocks(
+        self, seg_class: int, lbas: np.ndarray, blocks: np.ndarray, ts: int
+    ) -> None:
+        """Bulk ``_append_block``: stage a run of user blocks, dispatching each
+        stripe as it fills.  Payload copies are vectorized slice assignments;
+        only the per-LBA buffered-write bookkeeping stays scalar (dict ops).
+
+        Semantically identical to calling ``_append_block`` per block in
+        order (including superseding still-buffered copies of the same LBA).
+        """
+        n = lbas.shape[0]
+        i = 0
+        while i < n:
+            stripe = self._in_flight.get(seg_class)
+            if stripe is None:
+                stripe = _InFlightStripe(
+                    self.scheme.k, self._chunk_blocks_for(seg_class),
+                    self.zns_cfg.block_bytes,
+                )
+                self._in_flight[seg_class] = stripe
+            take = min(stripe.capacity - stripe.fill, n - i)
+            base = stripe.fill
+            stripe.add_many(lbas[i : i + take], blocks[i : i + take], ts)
+            # bookkeeping after the bulk copy so a duplicate LBA later in this
+            # same slice correctly cancels the slot staged earlier in it
+            for j in range(i, i + take):
+                lba = int(lbas[j])
+                buf = self._buffered.pop(lba, None)
+                if buf is not None:
+                    old_stripe, slot = buf
+                    old_stripe.lbas[slot] = -1  # cancel: becomes padding
+                self._buffered[lba] = (stripe, base + (j - i))
+            i += take
+            if stripe.full:
+                self._dispatch_stripe(seg_class)
 
     def _commit_all_staged(self) -> None:
         """Pad+commit every in-flight stripe and staged Zone-Append group."""
@@ -482,6 +545,78 @@ class ZapRAIDArray:
             "meta_gids": stripe.meta_gids.reshape(k, c),
         }
 
+    def _build_stripes(
+        self, ost: _OpenSegment, raws: list[_InFlightStripe], seq0: int
+    ) -> list[dict]:
+        """Batched ``_build_stripe``: one fused parity encode (payload and OOB
+        metadata alike) for all S staged stripes of a group.
+
+        Produces dicts bit-identical to calling ``_build_stripe`` per stripe
+        in staging order -- same commit-timestamp sequence, same cancellation
+        of superseded buffered copies -- but the codec is entered once with a
+        (S, k, c*block_bytes) tensor instead of S times.
+        """
+        info = ost.info
+        k, m, c = info.k, info.m, info.chunk_blocks
+        bb = self.zns_cfg.block_bytes
+        s_count = len(raws)
+        for raw in raws:
+            commit_ts = self._now()
+            raw.ts[:] = commit_ts
+            for slot in range(raw.capacity):
+                lba = int(raw.lbas[slot])
+                if lba >= 0:
+                    buf = self._buffered.get(lba)
+                    if buf is not None and buf[0] is raw and buf[1] == slot:
+                        del self._buffered[lba]
+        data_all = np.stack([raw.blocks for raw in raws]).reshape(s_count, k, c * bb)
+        if m:
+            parity_all = self.codec.encode_batch_np(data_all).reshape(
+                s_count, m, c, bb
+            )
+        else:
+            parity_all = np.zeros((s_count, 0, c, bb), np.uint8)
+        lbas_all = np.stack([raw.lbas for raw in raws])          # (S, k*c)
+        ts_all = np.stack([raw.ts for raw in raws])              # (S, k*c)
+        gids_all = np.stack([raw.meta_gids for raw in raws])     # (S, k*c)
+        seqs = np.arange(seq0, seq0 + s_count, dtype=np.int64)
+        meta_mask = gids_all >= 0
+        pad_mask = (lbas_all < 0) & ~meta_mask
+        user_mask = ~meta_mask & ~pad_mask
+        lba_fields = np.empty((s_count, k * c), dtype=np.uint64)
+        lba_fields[meta_mask] = (
+            gids_all[meta_mask].astype(np.uint64) << np.uint64(1)
+        ) | np.uint64(1)
+        lba_fields[pad_mask] = INVALID_LBA
+        lba_fields[user_mask] = lbas_all[user_mask].astype(np.uint64) << np.uint64(1)
+        data_oob = np.zeros((s_count, k, c), dtype=OOB_DTYPE)
+        data_oob["lba"] = lba_fields.reshape(s_count, k, c)
+        data_oob["ts"] = ts_all.reshape(s_count, k, c)
+        data_oob["stripe"] = seqs[:, None, None]
+        if m:
+            p_lba, p_ts = parity_oob_batch(
+                self.codec, data_oob["lba"], data_oob["ts"]
+            )
+            par_oob = np.zeros((s_count, m, c), dtype=OOB_DTYPE)
+            par_oob["lba"] = p_lba
+            par_oob["ts"] = p_ts
+            par_oob["stripe"] = seqs[:, None, None]
+        else:
+            par_oob = np.zeros((s_count, 0, c), dtype=OOB_DTYPE)
+        return [
+            {
+                "seq": int(seqs[i]),
+                "data": raws[i].blocks.reshape(k, c, bb),
+                "parity": parity_all[i],
+                "data_oob": data_oob[i],
+                "par_oob": par_oob[i],
+                "lbas": lbas_all[i].reshape(k, c),
+                "ts": ts_all[i].reshape(k, c),
+                "meta_gids": gids_all[i].reshape(k, c),
+            }
+            for i in range(s_count)
+        ]
+
     def _role_payload(self, built: dict, role: int):
         k = built["data"].shape[0]
         if role < k:
@@ -513,10 +648,13 @@ class ZapRAIDArray:
         c = info.chunk_blocks
         if not ost.group_buffer:
             return
-        staged = [
-            self._build_stripe(ost, raw, info.stripes_written + i)
-            for i, raw in enumerate(ost.group_buffer)
-        ]
+        if self.cfg.batched:
+            staged = self._build_stripes(ost, ost.group_buffer, info.stripes_written)
+        else:
+            staged = [
+                self._build_stripe(ost, raw, info.stripes_written + i)
+                for i, raw in enumerate(ost.group_buffer)
+            ]
         group_idx = staged[0]["seq"] // info.group_size
         ops = []
         for s_i, built in enumerate(staged):
@@ -653,10 +791,36 @@ class ZapRAIDArray:
     # ------------------------------------------------------------------ reads
 
     def read(self, lba: int, n_blocks: int = 1) -> np.ndarray:
-        out = np.zeros((n_blocks, self.zns_cfg.block_bytes), dtype=np.uint8)
-        for i in range(n_blocks):
-            out[i] = self._read_block(lba + i)
         self.stats.reads += n_blocks
+        # single-block reads keep the scalar path: the gather/group machinery
+        # costs more than it saves below ~2 blocks (random-read hot path)
+        if not self.cfg.batched or n_blocks == 1:
+            out = np.zeros((n_blocks, self.zns_cfg.block_bytes), dtype=np.uint8)
+            for i in range(n_blocks):
+                out[i] = self._read_block(lba + i)
+            return out
+        return self._read_blocks(np.arange(lba, lba + n_blocks, dtype=np.int64))
+
+    def _read_blocks(self, lbas: np.ndarray) -> np.ndarray:
+        """Vectorized multi-block read: one L2P gather, then one numpy gather
+        per (segment, drive) the blocks land on; failed drives fall back to
+        per-block degraded reads."""
+        out = np.zeros((lbas.shape[0], self.zns_cfg.block_bytes), dtype=np.uint8)
+        pbas = self.l2p.get_many(lbas)
+        mapped = np.nonzero(pbas != int(NO_PBA))[0]
+        if mapped.size == 0:
+            return out
+        segs, drives, offs = unpack_pba_many(pbas[mapped])
+        for key in {(int(s), int(d)) for s, d in zip(segs, drives)}:
+            seg_id, drive_idx = key
+            sel = (segs == seg_id) & (drives == drive_idx)
+            idxs = mapped[sel]
+            zone = self.segments[seg_id].info.zone_ids[drive_idx]
+            try:
+                out[idxs] = self.drives[drive_idx].read_blocks(zone, offs[sel])
+            except DriveFailed:
+                for i, off in zip(idxs, offs[sel]):
+                    out[i] = self._degraded_read(seg_id, drive_idx, int(off))
         return out
 
     def _read_block(self, lba: int) -> np.ndarray:
@@ -694,27 +858,7 @@ class ZapRAIDArray:
         info = rec.info
         c = info.chunk_blocks
         bb = self.zns_cfg.block_bytes
-        if info.uses_append:
-            cst = rec.cst
-            assert cst is not None, "CST missing for append segment"
-            sid = cst.stripe_id_at(failed_drive, chunk_idx)
-            group_idx = chunk_idx // info.group_size
-            seq = group_idx * info.group_size + sid
-            member_chunks = {}
-            for d in range(info.n_drives):
-                if d == failed_drive or self.drives[d].failed:
-                    continue
-                hit = cst.find_in_group(d, group_idx, sid)
-                if hit is not None:
-                    member_chunks[d] = hit
-            self.stats.cst_entries_accessed = cst.entries_accessed
-        else:
-            seq = chunk_idx
-            member_chunks = {
-                d: chunk_idx
-                for d in range(info.n_drives)
-                if d != failed_drive and not self.drives[d].failed
-            }
+        seq, member_chunks = self._chunk_members(rec, failed_drive, chunk_idx)
         lost_role = self.scheme.drive_to_role(failed_drive, seq)
         if self.scheme.mirror:
             # read the surviving twin copy directly
@@ -744,6 +888,150 @@ class ZapRAIDArray:
         # lost chunk was parity: re-encode
         par = self.codec.encode_np(data.reshape(self.scheme.k, c * bb))
         return par.reshape(self.scheme.m, c, bb)[lost_role - self.scheme.k]
+
+    # -- batched reconstruction (rebuild datapath) ----------------------------
+
+    def _chunk_members(
+        self, rec: _SegmentRecord, failed_drive: int, chunk_idx: int
+    ) -> tuple[int, dict[int, int]]:
+        """(stripe seq, {surviving drive -> chunk idx}) for one lost chunk."""
+        info = rec.info
+        if info.uses_append:
+            cst = rec.cst
+            assert cst is not None, "CST missing for append segment"
+            sid = cst.stripe_id_at(failed_drive, chunk_idx)
+            group_idx = chunk_idx // info.group_size
+            seq = group_idx * info.group_size + sid
+            members = {}
+            for d in range(info.n_drives):
+                if d == failed_drive or self.drives[d].failed:
+                    continue
+                hit = cst.find_in_group(d, group_idx, sid)
+                if hit is not None:
+                    members[d] = hit
+            self.stats.cst_entries_accessed = cst.entries_accessed
+        else:
+            seq = chunk_idx
+            members = {
+                d: chunk_idx
+                for d in range(info.n_drives)
+                if d != failed_drive and not self.drives[d].failed
+            }
+        return seq, members
+
+    def _reconstruct_chunks(
+        self, rec: _SegmentRecord, failed_drive: int, chunk_idxs: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Batched ``_reconstruct_chunk`` + ``_reconstruct_oob`` over a zone.
+
+        Survivor payloads and OOB rows are gathered with one scatter-read per
+        surviving drive, then decoded in one fused call per distinct
+        surviving-role set (parity rotation yields at most ``n`` such sets).
+        Returns ``(chunks (N, c, bb) uint8, oobs (N, c) OOB_DTYPE)``.
+        """
+        info = rec.info
+        k, m, c = self.scheme.k, self.scheme.m, info.chunk_blocks
+        bb = self.zns_cfg.block_bytes
+        n = len(chunk_idxs)
+        out = np.zeros((n, c, bb), np.uint8)
+        oobs = np.zeros((n, c), dtype=OOB_DTYPE)
+        oobs["lba"] = INVALID_LBA
+        seqs = np.empty(n, dtype=np.int64)
+        chosen: list[list[tuple[int, int]]] = []  # per chunk: [(drive, cidx)] * k
+        roles_of: list[tuple[int, ...]] = []
+        lost_roles = np.empty(n, dtype=np.int64)
+        twin_src: list[tuple[int, int]] = []  # mirror: (drive, cidx) of the twin
+        for pos, chunk_idx in enumerate(int(ci) for ci in chunk_idxs):
+            seq, members = self._chunk_members(rec, failed_drive, chunk_idx)
+            seqs[pos] = seq
+            lost_role = self.scheme.drive_to_role(failed_drive, seq)
+            lost_roles[pos] = lost_role
+            if self.scheme.mirror:
+                twin = (lost_role + self.scheme.k) % (2 * self.scheme.k)
+                src = next(
+                    (
+                        (d, cidx) for d, cidx in members.items()
+                        if self.scheme.drive_to_role(d, seq) == twin
+                    ),
+                    None,
+                )
+                if src is None:
+                    raise RuntimeError("mirror copy also lost")
+                twin_src.append(src)
+                chosen.append([])
+                roles_of.append(())
+                continue
+            picks = list(members.items())[: self.scheme.k]
+            if len(picks) < self.scheme.k:
+                raise RuntimeError("not enough surviving chunks to decode")
+            chosen.append(picks)
+            roles_of.append(
+                tuple(self.scheme.drive_to_role(d, seq) for d, _ in picks)
+            )
+        oobs["stripe"] = seqs[:, None]
+        if self.scheme.mirror:
+            # one gather per twin drive for payload and OOB alike
+            by_drive: dict[int, list[int]] = {}
+            for pos, (d, _) in enumerate(twin_src):
+                by_drive.setdefault(d, []).append(pos)
+            for d, poss in by_drive.items():
+                zone = info.zone_ids[d]
+                offs = np.concatenate([
+                    info.data_start() + twin_src[p][1] * c + np.arange(c)
+                    for p in poss
+                ])
+                out[poss] = self.drives[d].read_blocks(zone, offs).reshape(-1, c, bb)
+                oobs[poss] = self.drives[d].read_oob_blocks(zone, offs).reshape(-1, c)
+            return out, oobs
+        # gather survivor payload + metadata rows, one scatter-read per drive
+        rows = np.empty((n, k, c * bb), np.uint8)
+        rows_lba = np.empty((n, k, c), np.uint64)
+        rows_ts = np.empty((n, k, c), np.uint64)
+        by_drive2: dict[int, list[tuple[int, int, int]]] = {}  # d -> (pos, row, cidx)
+        for pos, picks in enumerate(chosen):
+            for row, (d, cidx) in enumerate(picks):
+                by_drive2.setdefault(d, []).append((pos, row, cidx))
+        for d, entries in by_drive2.items():
+            zone = info.zone_ids[d]
+            offs = np.concatenate([
+                info.data_start() + cidx * c + np.arange(c)
+                for _, _, cidx in entries
+            ])
+            blocks = self.drives[d].read_blocks(zone, offs).reshape(-1, c * bb)
+            roobs = self.drives[d].read_oob_blocks(zone, offs).reshape(-1, c)
+            for e, (pos, row, _) in enumerate(entries):
+                rows[pos, row] = blocks[e]
+                rows_lba[pos, row] = roobs[e]["lba"]
+                rows_ts[pos, row] = roobs[e]["ts"]
+        # one fused decode per distinct surviving-role set
+        for roles in sorted(set(roles_of)):
+            poss = np.array([p for p, r in enumerate(roles_of) if r == roles])
+            data = self.codec.decode_batch_np(rows[poss], roles).reshape(
+                len(poss), k, c, bb
+            )
+            d_lba, d_ts = decode_meta_batch(
+                self.codec, rows_lba[poss], rows_ts[poss], roles
+            )
+            lost = lost_roles[poss]
+            for data_role in np.unique(lost[lost < k]):
+                sel = poss[lost == data_role]
+                out[sel] = data[lost == data_role, int(data_role)]
+                oobs["lba"][sel] = d_lba[lost == data_role, int(data_role)]
+                oobs["ts"][sel] = d_ts[lost == data_role, int(data_role)]
+            par_sel = lost >= k
+            if np.any(par_sel):
+                par = self.codec.encode_batch_np(
+                    data[par_sel].reshape(-1, k, c * bb)
+                ).reshape(-1, m, c, bb)
+                p_lba, p_ts = parity_oob_batch(
+                    self.codec, d_lba[par_sel], d_ts[par_sel]
+                )
+                for e, pos in enumerate(poss[par_sel]):
+                    role = int(lost_roles[pos]) - k
+                    out[pos] = par[e, role]
+                    oobs["lba"][pos] = p_lba[e, role]
+                    oobs["ts"][pos] = p_ts[e, role]
+        return out, oobs
 
     # ------------------------------------------------------- L2P offload plumbing
 
@@ -835,6 +1123,20 @@ class ZapRAIDArray:
         for drive_idx in range(info.n_drives):
             zone = info.zone_ids[drive_idx]
             didxs = np.nonzero(rec.valid[drive_idx])[0]
+            if didxs.size == 0:
+                continue
+            if self.cfg.batched and not self.drives[drive_idx].failed:
+                # one gather read per drive for payloads and OOB alike
+                offs = info.data_start() + didxs
+                blocks = self.drives[drive_idx].read_blocks(zone, offs).copy()
+                oob_arr = self.drives[drive_idx].read_oob_blocks(zone, offs)
+                lba_fields = oob_arr["lba"].astype(np.uint64)
+                live = lba_fields != INVALID_LBA
+                is_meta = (lba_fields & np.uint64(1)).astype(bool)
+                for i in np.nonzero(live)[0]:
+                    tgt = meta_moves if is_meta[i] else moves
+                    tgt.append((int(lba_fields[i]) >> 1, blocks[i]))
+                continue
             for didx in didxs:
                 off = info.data_start() + int(didx)
                 try:
@@ -858,17 +1160,39 @@ class ZapRAIDArray:
             if (self.cfg.hybrid and self.large_ids)
             else int(SegmentClass.SMALL)
         )
-        for lba, block in moves:
-            if lba in self._buffered:
-                continue  # a newer user write is in flight; old copy is dead
-            if self.l2p.get(lba) == int(NO_PBA):
-                continue
-            seg_id, d, off = unpack_pba(self.l2p.get(lba))
-            if seg_id != info.seg_id:
-                continue  # stale by now
-            ts = self._now()
-            self._append_block(target_class, lba, block, ts)
-            self.stats.gc_blocks_moved += 1
+        if self.cfg.batched:
+            # GC'd LBAs are unique (one live copy each), so eligibility can be
+            # decided up front and the survivors staged in one bulk append.
+            if moves:
+                mv_lbas = np.array([l for l, _ in moves], dtype=np.int64)
+                pbas = self.l2p.get_many(mv_lbas)
+                segs, _, _ = unpack_pba_many(pbas)
+                ok = (
+                    (pbas != int(NO_PBA))
+                    & (segs == info.seg_id)
+                    & np.array([l not in self._buffered for l, _ in moves])
+                )
+                sel = np.nonzero(ok)[0]
+                if sel.size:
+                    self._append_blocks(
+                        target_class,
+                        mv_lbas[sel],
+                        np.stack([moves[i][1] for i in sel]),
+                        0,
+                    )
+                    self.stats.gc_blocks_moved += int(sel.size)
+        else:
+            for lba, block in moves:
+                if lba in self._buffered:
+                    continue  # a newer user write is in flight; old copy is dead
+                if self.l2p.get(lba) == int(NO_PBA):
+                    continue
+                seg_id, d, off = unpack_pba(self.l2p.get(lba))
+                if seg_id != info.seg_id:
+                    continue  # stale by now
+                ts = self._now()
+                self._append_block(target_class, lba, block, ts)
+                self.stats.gc_blocks_moved += 1
         for gid, block in meta_moves:
             pba = self.mapping_table.get(gid)
             if pba is None or unpack_pba(pba)[0] != info.seg_id:
@@ -912,13 +1236,25 @@ class ZapRAIDArray:
                 n_chunks = info.n_stripes
             meta = np.zeros(n_chunks * c, dtype=OOB_DTYPE)
             meta["lba"] = INVALID_LBA
-            for chunk_idx in range(n_chunks):
-                chunk = self._reconstruct_chunk(rec, drive_idx, chunk_idx)
-                oobs = self._reconstruct_oob(rec, drive_idx, chunk_idx)
-                off = info.data_start() + chunk_idx * c
-                new.zone_write(zone, off, chunk, oobs)
-                meta[chunk_idx * c : (chunk_idx + 1) * c] = oobs
-                self.stats.recovery_blocks_read += self.scheme.k * c
+            if self.cfg.batched and n_chunks:
+                # whole-zone batched reconstruction: per-drive gather reads,
+                # one fused decode per surviving-role set, one ordered write
+                chunks, oob_all = self._reconstruct_chunks(
+                    rec, drive_idx, np.arange(n_chunks)
+                )
+                meta[:] = oob_all.reshape(-1)
+                new.zone_write(
+                    zone, info.data_start(), chunks.reshape(-1, bb), meta
+                )
+                self.stats.recovery_blocks_read += n_chunks * self.scheme.k * c
+            else:
+                for chunk_idx in range(n_chunks):
+                    chunk = self._reconstruct_chunk(rec, drive_idx, chunk_idx)
+                    oobs = self._reconstruct_oob(rec, drive_idx, chunk_idx)
+                    off = info.data_start() + chunk_idx * c
+                    new.zone_write(zone, off, chunk, oobs)
+                    meta[chunk_idx * c : (chunk_idx + 1) * c] = oobs
+                    self.stats.recovery_blocks_read += self.scheme.k * c
             if ost is not None:
                 ost.meta[drive_idx, : n_chunks * c] = meta
             if info.state == int(SegmentState.SEALED):
@@ -938,24 +1274,7 @@ class ZapRAIDArray:
         """Rebuild the lost chunk's OOB entries from survivors (parity OOB)."""
         info = rec.info
         c = info.chunk_blocks
-        if info.uses_append:
-            cst = rec.cst
-            sid = cst.stripe_id_at(failed_drive, chunk_idx)
-            group_idx = chunk_idx // info.group_size
-            seq = group_idx * info.group_size + sid
-            members = {
-                d: cst.find_in_group(d, group_idx, sid)
-                for d in range(info.n_drives)
-                if d != failed_drive and not self.drives[d].failed
-            }
-            members = {d: v for d, v in members.items() if v is not None}
-        else:
-            seq = chunk_idx
-            members = {
-                d: chunk_idx
-                for d in range(info.n_drives)
-                if d != failed_drive and not self.drives[d].failed
-            }
+        seq, members = self._chunk_members(rec, failed_drive, chunk_idx)
         lost_role = self.scheme.drive_to_role(failed_drive, seq)
         out = np.zeros(c, dtype=OOB_DTYPE)
         out["stripe"] = seq

@@ -40,6 +40,16 @@ def unpack_pba(pba: int) -> tuple[int, int, int]:
     return pba >> _SEG_SHIFT, (pba >> _DRIVE_SHIFT) & _DRIVE_MASK, pba & _OFF_MASK
 
 
+def unpack_pba_many(pbas: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized ``unpack_pba``: int64 array -> (seg, drive, off) arrays."""
+    pbas = np.asarray(pbas, dtype=np.int64)
+    return (
+        pbas >> _SEG_SHIFT,
+        (pbas >> _DRIVE_SHIFT) & _DRIVE_MASK,
+        pbas & _OFF_MASK,
+    )
+
+
 class L2PTable:
     def __init__(
         self,
@@ -86,10 +96,13 @@ class L2PTable:
             entries = np.full(self.epg, NO_PBA, dtype=np.int64)
         self.resident[gid] = entries
         self.refbit[gid] = 1
-        self._maybe_evict()
+        # The faulting group is pinned: the caller is about to read or mutate
+        # the returned array, so evicting it here would orphan that update
+        # (a clean eviction writes nothing back and the store is lost).
+        self._maybe_evict(pinned=gid)
         return entries
 
-    def _maybe_evict(self) -> None:
+    def _maybe_evict(self, pinned: Optional[int] = None) -> None:
         while len(self.resident) > self.limit_groups:
             # CLOCK sweep over resident groups in gid order from the hand.
             gids = sorted(self.resident.keys())
@@ -101,6 +114,8 @@ class L2PTable:
                     break
             for step in range(2 * n + 1):
                 g = gids[(start + step) % n]
+                if g == pinned:
+                    continue
                 if self.refbit[g]:
                     self.refbit[g] = 0
                     continue
@@ -109,6 +124,8 @@ class L2PTable:
                 break
             else:  # all referenced twice around: evict the hand's group
                 g = gids[start]
+                if g == pinned:
+                    g = gids[(start + 1) % n]
                 self._evict(g)
 
     def _evict(self, gid: int) -> None:
@@ -135,6 +152,37 @@ class L2PTable:
         gid, idx = self._group_of(lba)
         self._fault_in(gid)[idx] = pba
         self.dirty.add(gid)
+
+    def get_many(self, lbas: np.ndarray) -> np.ndarray:
+        """Vectorized lookup: int array of LBAs -> int64 array of PBAs.
+
+        Flat mode is a single numpy gather; offload mode faults in each
+        distinct entry group once and gathers within it, so a sequential
+        multi-block read costs O(groups) faults instead of O(blocks)."""
+        lbas = np.asarray(lbas, dtype=np.int64)
+        self.lookups += int(lbas.size)
+        if not self.offload:
+            return self.flat[lbas].copy()
+        out = np.empty(lbas.shape, dtype=np.int64)
+        gids = lbas // self.epg
+        for gid in np.unique(gids):
+            sel = gids == gid
+            out[sel] = self._fault_in(int(gid))[lbas[sel] % self.epg]
+        return out
+
+    def set_many(self, lbas: np.ndarray, pbas: np.ndarray) -> None:
+        """Vectorized update; later entries win on duplicate LBAs (numpy
+        fancy-assignment order), matching a sequential ``set`` loop."""
+        lbas = np.asarray(lbas, dtype=np.int64)
+        pbas = np.asarray(pbas, dtype=np.int64)
+        if not self.offload:
+            self.flat[lbas] = pbas
+            return
+        gids = lbas // self.epg
+        for gid in np.unique(gids):
+            sel = gids == gid
+            self._fault_in(int(gid))[lbas[sel] % self.epg] = pbas[sel]
+            self.dirty.add(int(gid))
 
     def compare_and_clear(self, lba: int, pba: int) -> None:
         """Invalidate the mapping only if it still points at ``pba`` (GC races)."""

@@ -124,6 +124,65 @@ class StripeCodec:
             use_pallas=self.use_pallas, interpret=self.interpret,
         )
 
+    # batched (stripe-group) datapath: data (S, k, n_i32) int32
+    def encode_batch(self, data_i32: jnp.ndarray) -> jnp.ndarray:
+        """Encode S stripes at once: (S, k, n) -> (S, m, n) parity.
+
+        One fused kernel dispatch per group instead of one per stripe; the
+        output is bit-identical to stacking ``encode`` over the S stripes.
+        """
+        s = self.scheme
+        assert data_i32.ndim == 3 and data_i32.shape[1] == s.k, (data_i32.shape, s)
+        if s.m == 0:
+            return jnp.zeros((data_i32.shape[0], 0, data_i32.shape[2]), jnp.int32)
+        if s.mirror:
+            return data_i32
+        if s.m == 1:
+            p = ops.xor_parity_batch(
+                data_i32, use_pallas=self.use_pallas, interpret=self.interpret
+            )
+            return p[:, None, :]
+        return ops.rs_encode_batch(
+            data_i32, s.m, use_pallas=self.use_pallas, interpret=self.interpret
+        )
+
+    def decode_batch(
+        self, surviving_i32: jnp.ndarray, surviving_roles: tuple[int, ...]
+    ) -> jnp.ndarray:
+        """Reconstruct S stripes' data chunks from survivors sharing one role
+        set: (S, k, n) survivors -> (S, k, n) data, bit-identical to stacking
+        ``decode`` over the S stripes."""
+        s = self.scheme
+        if s.m == 0:
+            raise ValueError("RAID-0 cannot decode lost chunks")
+        roles = tuple(surviving_roles)
+        if s.mirror:
+            out = {}
+            for i, role in enumerate(roles):
+                out.setdefault(role % s.k, surviving_i32[:, i])
+            if len(out) < s.k:
+                raise ValueError("RAID-01: both copies of a chunk lost")
+            return jnp.stack([out[i] for i in range(s.k)], axis=1)
+        if len(roles) != s.k:
+            raise ValueError(f"need exactly k={s.k} surviving rows, got {len(roles)}")
+        if set(roles) == set(range(s.k)):
+            order = [roles.index(i) for i in range(s.k)]
+            return surviving_i32[:, jnp.array(order)]
+        if s.m == 1:
+            lost = set(range(s.k)) - set(roles)
+            assert len(lost) == 1
+            lost_role = lost.pop()
+            rec = ops.xor_parity_batch(
+                surviving_i32, use_pallas=self.use_pallas, interpret=self.interpret
+            )
+            cols = {role: surviving_i32[:, i] for i, role in enumerate(roles) if role < s.k}
+            cols[lost_role] = rec
+            return jnp.stack([cols[i] for i in range(s.k)], axis=1)
+        return ops.rs_decode_batch(
+            surviving_i32, roles, s.k, s.m,
+            use_pallas=self.use_pallas, interpret=self.interpret,
+        )
+
     def decode_np(self, surviving: np.ndarray, surviving_roles: tuple[int, ...]) -> np.ndarray:
         """Byte-level convenience wrapper (uint8 in/out) used by recovery paths."""
         packed = ops.pack_bytes(jnp.asarray(surviving))
@@ -134,6 +193,45 @@ class StripeCodec:
         packed = ops.pack_bytes(jnp.asarray(data))
         out = self.encode(packed)
         return np.asarray(ops.unpack_bytes(out)).reshape(self.scheme.m, -1) if self.scheme.m else np.zeros((0, data.shape[1]), np.uint8)
+
+    @staticmethod
+    def _pad_batch(data: np.ndarray) -> tuple[np.ndarray, int]:
+        """Pad the stripe dim to the next power of two (zero stripes).
+
+        Partial groups (flush, segment tail) would otherwise compile a fresh
+        XLA executable per distinct S; bucketing to powers of two bounds the
+        shape universe at log2(G) variants so steady state never recompiles.
+        Zero padding is exact: every scheme's codec is stripe-independent.
+        """
+        s_count = data.shape[0]
+        target = 1 << max(0, (s_count - 1).bit_length())
+        if target != s_count:
+            data = np.concatenate(
+                [data, np.zeros((target - s_count, *data.shape[1:]), data.dtype)]
+            )
+        return data, s_count
+
+    def encode_batch_np(self, data: np.ndarray) -> np.ndarray:
+        """(S, k, n_bytes) uint8 -> (S, m, n_bytes) parity, one pack/unpack
+        round-trip and one fused kernel call for the whole batch."""
+        s_count, _, n_bytes = data.shape
+        if self.scheme.m == 0:
+            return np.zeros((s_count, 0, n_bytes), np.uint8)
+        padded, s_count = self._pad_batch(np.ascontiguousarray(data))
+        packed = ops.pack_bytes(jnp.asarray(padded))
+        out = self.encode_batch(packed)
+        return np.asarray(ops.unpack_bytes(out)).reshape(
+            padded.shape[0], self.scheme.m, n_bytes
+        )[:s_count]
+
+    def decode_batch_np(
+        self, surviving: np.ndarray, surviving_roles: tuple[int, ...]
+    ) -> np.ndarray:
+        """(S, k, n_bytes) uint8 survivors -> (S, k, n_bytes) data."""
+        padded, s_count = self._pad_batch(np.ascontiguousarray(surviving))
+        packed = ops.pack_bytes(jnp.asarray(padded))
+        out = self.decode_batch(packed, surviving_roles)
+        return np.asarray(ops.unpack_bytes(out))[:s_count]
 
 
 def _meta_rows(lbas: np.ndarray, ts: np.ndarray) -> np.ndarray:
@@ -168,6 +266,50 @@ def parity_oob(
     rows = _meta_rows(data_lbas, data_ts)
     enc = codec.encode_np(rows)
     return _meta_unrows(enc, c)
+
+
+def _meta_rows_batch(lbas: np.ndarray, ts: np.ndarray) -> np.ndarray:
+    """(S, rows, c) u64 LBAs + timestamps -> (S, rows, 16c) bytes."""
+    s, rows, c = lbas.shape
+    return np.concatenate(
+        [
+            np.ascontiguousarray(lbas.astype(np.uint64)).view(np.uint8).reshape(s, rows, -1),
+            np.ascontiguousarray(ts.astype(np.uint64)).view(np.uint8).reshape(s, rows, -1),
+        ],
+        axis=2,
+    )
+
+
+def _meta_unrows_batch(raw: np.ndarray, c: int) -> tuple[np.ndarray, np.ndarray]:
+    s, rows = raw.shape[0], raw.shape[1]
+    lbas = np.ascontiguousarray(raw[:, :, : 8 * c]).view(np.uint64).reshape(s, rows, c)
+    ts = np.ascontiguousarray(raw[:, :, 8 * c :]).view(np.uint64).reshape(s, rows, c)
+    return lbas, ts
+
+
+def parity_oob_batch(
+    codec: "StripeCodec", data_lbas: np.ndarray, data_ts: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Batched ``parity_oob``: (S, k, c) metadata -> (S, m, c) parity metadata
+    in one fused encode (bit-identical to the per-stripe path)."""
+    c = data_lbas.shape[2]
+    rows = _meta_rows_batch(data_lbas, data_ts)
+    enc = codec.encode_batch_np(rows)
+    return _meta_unrows_batch(enc, c)
+
+
+def decode_meta_batch(
+    codec: "StripeCodec",
+    surviving_lbas: np.ndarray,
+    surviving_ts: np.ndarray,
+    surviving_roles: tuple[int, ...],
+) -> tuple[np.ndarray, np.ndarray]:
+    """Batched ``decode_meta``: (S, k, c) surviving metadata rows sharing one
+    role set -> all S stripes' (k, c) data metadata in one fused decode."""
+    c = surviving_lbas.shape[2]
+    rows = _meta_rows_batch(surviving_lbas, surviving_ts)
+    dec = codec.decode_batch_np(rows, surviving_roles)
+    return _meta_unrows_batch(dec.reshape(rows.shape[0], codec.scheme.k, -1), c)
 
 
 def decode_meta(

@@ -134,6 +134,29 @@ class SimZnsDrive:
             self.state[zone] = ZoneState.FULL
         return True
 
+    def _commit_blocks(self, zone: int, blocks: np.ndarray, oobs: np.ndarray) -> None:
+        """Persist a contiguous run of blocks at the write pointer.
+
+        When no crash budget is armed the whole run lands in two slice
+        assignments (the hot path for group commits); with a budget armed we
+        fall back to per-block commits so power loss cuts at exact block
+        granularity, like NAND.
+        """
+        n = blocks.shape[0]
+        if self.budget.remaining is None:
+            off = int(self.wp[zone])
+            assert off + n <= self.cfg.zone_cap_blocks, (zone, off, n)
+            self.data[zone, off : off + n] = blocks
+            self.oob[zone, off : off + n] = oobs
+            self.wp[zone] = off + n
+            self.blocks_written += n
+            if self.wp[zone] == self.cfg.zone_cap_blocks:
+                self.state[zone] = ZoneState.FULL
+            return
+        for i in range(n):
+            if not self._commit_block(zone, blocks[i], oobs[i]):
+                raise DeviceCrashed(f"crash on drive={self.drive_id}")
+
     def zone_write(self, zone: int, offset: int, blocks: np.ndarray, oobs: np.ndarray) -> None:
         """Ordered write: ``offset`` must equal the zone write pointer."""
         self._check_alive()
@@ -143,9 +166,7 @@ class SimZnsDrive:
             )
         if self.state[zone] == ZoneState.EMPTY:
             self.state[zone] = ZoneState.OPEN
-        for i in range(blocks.shape[0]):
-            if not self._commit_block(zone, blocks[i], oobs[i]):
-                raise DeviceCrashed(f"crash during zone_write drive={self.drive_id}")
+        self._commit_blocks(zone, blocks, oobs)
 
     def zone_append_begin(self, zone: int) -> None:
         self._check_alive()
@@ -161,9 +182,7 @@ class SimZnsDrive:
         """
         self._check_alive()
         off = int(self.wp[zone])
-        for i in range(blocks.shape[0]):
-            if not self._commit_block(zone, blocks[i], oobs[i]):
-                raise DeviceCrashed(f"crash during zone_append drive={self.drive_id}")
+        self._commit_blocks(zone, blocks, oobs)
         return off
 
     # -- reads --------------------------------------------------------------
@@ -175,6 +194,16 @@ class SimZnsDrive:
     def read_oob(self, zone: int, offset: int, n_blocks: int) -> np.ndarray:
         self._check_alive()
         return self.oob[zone, offset : offset + n_blocks]
+
+    def read_blocks(self, zone: int, offsets: np.ndarray) -> np.ndarray:
+        """Gather scattered blocks of one zone: (len(offsets), block_bytes)."""
+        self._check_alive()
+        return self.data[zone, np.asarray(offsets, dtype=np.int64)]
+
+    def read_oob_blocks(self, zone: int, offsets: np.ndarray) -> np.ndarray:
+        """Gather scattered OOB entries of one zone."""
+        self._check_alive()
+        return self.oob[zone, np.asarray(offsets, dtype=np.int64)]
 
     # -- failure ------------------------------------------------------------
 

@@ -40,6 +40,52 @@ def _make_kernel(m: int, k: int):
     return kernel
 
 
+def _make_batch_kernel(m: int, k: int):
+    def kernel(coeff_ref, d_ref, o_ref):
+        d = d_ref[0]  # (k, bn) int32 -- one stripe's tile
+        coeff = coeff_ref[...]  # (m, k) int32
+        for j in range(m):
+            acc = jnp.zeros_like(d[0])
+            for i in range(k):
+                acc = acc ^ swar_gf_scale(d[i], coeff[j, i])
+            o_ref[0, j, :] = acc
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gf256_matmul_batch(
+    coeff: jax.Array,
+    data: jax.Array,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+) -> jax.Array:
+    """(m, k) GF coeffs x (S, k, n) packed int32 -> (S, m, n) packed int32.
+
+    Batched variant for whole stripe groups: a 2-D (stripe, lane-tile) grid
+    runs the same SWAR double-and-add body per tile, with the tiny coefficient
+    matrix broadcast to every grid step, so one ``pallas_call`` encodes (or
+    decodes) all S stripes instead of S dispatches.
+    """
+    m, k = coeff.shape
+    s, k2, n = data.shape
+    assert k == k2, (coeff.shape, data.shape)
+    bn = min(block_n, n)
+    assert n % bn == 0 and bn % 128 == 0, (n, bn)
+    return pl.pallas_call(
+        _make_batch_kernel(m, k),
+        grid=(s, n // bn),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, k, bn), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, m, bn), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((s, m, n), jnp.int32),
+        interpret=interpret,
+    )(coeff.astype(jnp.int32), data)
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def gf256_matmul(
     coeff: jax.Array,

@@ -20,9 +20,26 @@ import numpy as np
 
 from repro.core import gf
 from repro.kernels import ref
-from repro.kernels.gf256_matmul import gf256_matmul
-from repro.kernels.parity_xor import parity_xor
+from repro.kernels.gf256_matmul import gf256_matmul, gf256_matmul_batch
+from repro.kernels.parity_xor import parity_xor, parity_xor_batch
 from repro.kernels.ssd_scan import ssd_scan
+
+
+@functools.lru_cache(maxsize=None)
+def rs_parity_coeff(k: int, m: int) -> jax.Array:
+    """Device-resident (m, k) RS parity matrix, cached per (k, m).
+
+    The matrices are tiny but rebuilding + re-transferring them on every
+    encode forces a host->device pack and a retrace; caching the packed
+    int32 array makes repeat encodes hit the jit cache directly.
+    """
+    return jnp.asarray(gf.rs_parity_matrix(k, m), jnp.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def rs_decode_coeff(k: int, m: int, surviving: tuple[int, ...]) -> jax.Array:
+    """Device-resident (k, k) RS decode matrix, cached per survivor set."""
+    return jnp.asarray(gf.rs_decode_matrix(k, m, surviving), jnp.int32)
 
 
 def pack_bytes(data_u8: jax.Array) -> jax.Array:
@@ -83,7 +100,7 @@ def rs_encode(
 ) -> jax.Array:
     """Encode (k, n) data chunks into (m, n) RS parity chunks."""
     k = chunks_i32.shape[0]
-    coeff = jnp.asarray(gf.rs_parity_matrix(k, m), jnp.int32)
+    coeff = rs_parity_coeff(k, m)
     return rs_matmul(coeff, chunks_i32, use_pallas=use_pallas, interpret=interpret)
 
 
@@ -97,8 +114,67 @@ def rs_decode(
     interpret: bool = True,
 ) -> jax.Array:
     """Reconstruct the k data chunks from any k surviving codeword rows."""
-    dec = jnp.asarray(gf.rs_decode_matrix(k, m, tuple(surviving_rows)), jnp.int32)
+    dec = rs_decode_coeff(k, m, tuple(surviving_rows))
     return rs_matmul(dec, surviving_i32, use_pallas=use_pallas, interpret=interpret)
+
+
+# ------------------------------------------------------- batched (group) ops
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def xor_parity_batch(
+    chunks_i32: jax.Array, *, use_pallas: bool = True, interpret: bool = True
+) -> jax.Array:
+    """XOR parity for a whole stripe group: (S, k, n) int32 -> (S, n) int32."""
+    if use_pallas:
+        padded, n = _pad_lanes(chunks_i32)
+        return parity_xor_batch(padded, interpret=interpret)[:, :n]
+    return ref.parity_xor_batch_ref(chunks_i32)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def rs_matmul_batch(
+    coeff_i32: jax.Array,
+    chunks_i32: jax.Array,
+    *,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """GF(256) (m,k) x (S,k,n) -> (S,m,n) on int32-packed bytes."""
+    if use_pallas:
+        padded, n = _pad_lanes(chunks_i32)
+        return gf256_matmul_batch(coeff_i32, padded, interpret=interpret)[:, :, :n]
+    return ref.gf256_matmul_batch_ref(coeff_i32, chunks_i32)
+
+
+def rs_encode_batch(
+    chunks_i32: jax.Array,
+    m: int,
+    *,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Encode (S, k, n) stripes into (S, m, n) RS parity in one fused call."""
+    k = chunks_i32.shape[1]
+    coeff = rs_parity_coeff(k, m)
+    return rs_matmul_batch(
+        coeff, chunks_i32, use_pallas=use_pallas, interpret=interpret
+    )
+
+
+def rs_decode_batch(
+    surviving_i32: jax.Array,
+    surviving_rows: tuple[int, ...],
+    k: int,
+    m: int,
+    *,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Reconstruct (S, k, n) data from (S, k, n) survivors sharing one role set."""
+    dec = rs_decode_coeff(k, m, tuple(surviving_rows))
+    return rs_matmul_batch(
+        dec, surviving_i32, use_pallas=use_pallas, interpret=interpret
+    )
 
 
 def ssd_chunk_scan(

@@ -25,6 +25,38 @@ def _parity_xor_kernel(x_ref, o_ref):
     )[None, :]
 
 
+def _parity_xor_batch_kernel(x_ref, o_ref):
+    x = x_ref[...]  # (1, k, bn) int32
+    o_ref[...] = jax.lax.reduce(
+        x, jnp.int32(0), jax.lax.bitwise_xor, dimensions=(1,)
+    )[:, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def parity_xor_batch(
+    data: jax.Array, *, block_n: int = DEFAULT_BLOCK_N, interpret: bool = True
+) -> jax.Array:
+    """XOR-reduce a whole stripe group: (S, k, n) int32 -> (S, n) int32.
+
+    One ``pallas_call`` over a 2-D (stripe, lane-tile) grid replaces S
+    per-stripe dispatches: grid step (i, j) streams stripe i's (k, bn) tile
+    through VMEM exactly like the single-stripe kernel, so the HBM-bandwidth
+    roofline is unchanged while the dispatch cost is paid once per group.
+    """
+    s, k, n = data.shape
+    bn = min(block_n, n)
+    assert n % bn == 0 and bn % 128 == 0, (n, bn)
+    out = pl.pallas_call(
+        _parity_xor_batch_kernel,
+        grid=(s, n // bn),
+        in_specs=[pl.BlockSpec((1, k, bn), lambda i, j: (i, 0, j))],
+        out_specs=pl.BlockSpec((1, 1, bn), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((s, 1, n), jnp.int32),
+        interpret=interpret,
+    )(data)
+    return out[:, 0]
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def parity_xor(
     data: jax.Array, *, block_n: int = DEFAULT_BLOCK_N, interpret: bool = True

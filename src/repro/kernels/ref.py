@@ -39,6 +39,18 @@ def gf256_matmul_ref(coeff: jax.Array, data: jax.Array) -> jax.Array:
     return jnp.stack([one_row(j) for j in range(m)], axis=0)
 
 
+def parity_xor_batch_ref(data: jax.Array) -> jax.Array:
+    """XOR-reduce ``data`` of shape (S, k, n) int32 -> (S, n) int32."""
+    return jax.lax.reduce(
+        data, jnp.int32(0), jax.lax.bitwise_xor, dimensions=(1,)
+    )
+
+
+def gf256_matmul_batch_ref(coeff: jax.Array, data: jax.Array) -> jax.Array:
+    """Batched GF(256) matmul: (m, k) coeffs x (S, k, n) -> (S, m, n)."""
+    return jax.vmap(lambda d: gf256_matmul_ref(coeff, d))(data)
+
+
 def ssd_scan_ref(
     x: jax.Array,      # (bh, t, p)   values (already multiplied by nothing)
     dt: jax.Array,     # (bh, t)      softplus'd step sizes (>0)

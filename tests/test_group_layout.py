@@ -3,7 +3,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.group_layout import CompactStripeTable, stripe_id_dtype
 from repro.core.array import ZapRaidConfig, ZapRAIDArray

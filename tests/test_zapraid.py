@@ -4,7 +4,7 @@ management, and L2P offloading -- including a hypothesis property test that
 random workloads with random crash points never lose acknowledged data."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.array import ZapRaidConfig, ZapRAIDArray
 from repro.core.recovery import recover_array
