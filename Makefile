@@ -11,10 +11,11 @@ test:
 test-fast:
 	$(PY) -m pytest -x -q --ignore=tests/test_system.py --ignore=tests/test_checkpoint.py
 
-# Full benchmark sweep; writes BENCH_PR2.json next to the CSV output.
+# Full benchmark sweep; writes BENCH_FULL.json (gitignored) next to the CSV.
 bench:
 	$(PY) -m benchmarks.run
 
-# Cheap subset with small shapes for CI time budgets.
+# Cheap subset with small shapes for CI time budgets; rewrites the committed
+# BENCH_PR3.json baseline (the quick set carries the latency-QoS figures).
 bench-quick:
 	$(PY) -m benchmarks.run --quick

@@ -8,12 +8,18 @@ Each benchmark prints CSV rows ``name,us_per_call,derived``:
   performance model (MiB/s, seconds, ...), reproducing the paper's trends
   (the hardware itself is not available here; see DESIGN.md §7).
 
-Besides the CSV on stdout, a full run writes a machine-readable JSON file
-(``BENCH_PR2.json``; ``--json PATH`` to override) mapping each benchmark name
-to its measured ``us_per_call`` and ``derived`` figure, so the perf trajectory
-can be tracked across PRs.  ``--quick`` shrinks shapes and iteration counts to
-fit CI time budgets; partial sweeps (``--quick``/``--only``) skip the JSON
-unless ``--json`` is given explicitly, so they never clobber the baseline.
+Besides the CSV on stdout, sweeps write a machine-readable JSON file mapping
+each benchmark name to its measured ``us_per_call`` and ``derived`` figure,
+so the perf trajectory can be tracked across PRs.  Each command maps to its
+own file so no sweep clobbers another's baseline: ``--quick`` (small shapes,
+cheap subset, carries the latency-QoS acceptance figures) writes the
+committed ``BENCH_PR3.json``; full runs write ``BENCH_FULL.json``; ``--only``
+sweeps skip the JSON unless ``--json PATH`` is given explicitly.
+
+Timed scenarios (``exp10/trace_timed_*``, ``qos/*``) run on the
+discrete-event engine (``repro.sim``): their ``us_per_call`` column is a
+*virtual-time latency percentile* from the ZN540-calibrated device model,
+not host wall time.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick] [--json PATH]
 """
@@ -252,10 +258,15 @@ def bench_l2p_offload():
 # --------------------------------------------------------------- Exp#10
 
 def bench_trace():
-    """Exp#10: cloud-block-storage-like trace (60% <=4K, 25% >=16K writes)."""
+    """Exp#10: cloud-block-storage-like trace (60% <=4K, 25% >=16K writes),
+    replayed through the discrete-event timed pipeline (repro.sim): the same
+    mixed workload now reports measured p50/p99 latency from the ZN540
+    device model alongside the analytic throughput comparison."""
     from repro.core import perfmodel as pm
-    from repro.core.array import ZapRaidConfig, ZapRAIDArray
+    from repro.core.array import ZapRaidConfig
+    from repro.core.handlers import HandlerPipeline
     from repro.core.zns import ZnsConfig
+    from repro.sim import Request
 
     rng = np.random.default_rng(5)
     cfg = ZapRaidConfig(scheme="raid5", n_drives=4, hybrid=True,
@@ -263,26 +274,119 @@ def bench_trace():
                         small_chunk_blocks=1, large_chunk_blocks=2,
                         logical_blocks=256, gc_free_segments_low=1)
     zns = ZnsConfig(n_zones=20, zone_cap_blocks=64, block_bytes=256)
-    arr = ZapRAIDArray(cfg, zns)
-    t0 = time.perf_counter()
-    n_ops = 600
+    pipe = HandlerPipeline.build_timed(cfg, zns, seed=5)
+    pipe.precondition(
+        (lba, rng.integers(0, 256, (1, 256), dtype=np.uint8))
+        for lba in range(256)
+    )
+    n_ops = 400 if QUICK else 600
+    reqs, t = [], 0.0
     for _ in range(n_ops):
+        t += float(rng.exponential(40.0))  # ~25k IOPS open-loop arrivals
         r = rng.random()
         n = 1 if r < 0.60 else (2 if r < 0.75 else 3)
         lba = int(rng.integers(0, 256 - n))
-        if rng.random() < 0.85:
-            arr.write(lba, rng.integers(0, 256, (n, 256), dtype=np.uint8))
-        else:
-            arr.read(lba, n)
-    arr.flush()
-    us = (time.perf_counter() - t0) * 1e6 / n_ops
+        op = "W" if rng.random() < 0.85 else "R"
+        reqs.append(Request(t, "trace", op, lba, n))
+    rec = pipe.replay(reqs)
+    for name, lat_us, derived in rec.to_bench_rows("exp10/trace_timed"):
+        emit(name, lat_us, derived)
+    # us column: mean virtual time per op (deterministic), not host wall time
+    emit("exp10/trace_timed_tput", rec.span_us() / n_ops,
+         f"{rec.throughput_mib_s(256):.1f}MiB/s_sim")
     zap = pm.hybrid_write_perf(k=3, m=1, cs_kib=8, cl_kib=16, n_small=1,
                                n_large=3, frac_small=0.75, group_size=256)
     zw = pm.hybrid_write_perf(k=3, m=1, cs_kib=8, cl_kib=16, n_small=1,
                               n_large=3, frac_small=0.75, group_size=1)
-    emit("exp10/trace_sim", us,
+    emit("exp10/trace_model", 0.0,
          f"zap={zap.throughput_mib_s:.0f}MiB/s_zw={zw.throughput_mib_s:.0f}MiB/s"
          f"_gain={100*(zap.throughput_mib_s/zw.throughput_mib_s-1):.0f}%")
+
+
+# ------------------------------------------------- latency QoS (timed engine)
+
+def bench_latency_qos():
+    """Latency QoS on the timed engine, three scenario families:
+
+    * multi-tenant fairness -- a bursty hotspot writer next to a uniform
+      reader on a healthy array (per-tenant p50/p99);
+    * degraded reads under load -- the same read load replayed healthy vs
+      with one failed drive: reads landing on the failed drive pay k
+      survivor reads + decode and queue behind the scan traffic (the
+      paper's Fig. 7 gap, now as a measured tail);
+    * recovery under load -- the read load with a full-drive rebuild
+      running as an engine actor contending for device time.
+    """
+    from repro.core.array import ZapRaidConfig
+    from repro.core.handlers import HandlerPipeline
+    from repro.core.zns import ZnsConfig
+    from repro.sim import TenantSpec, multi_tenant
+
+    n_ops = 300 if QUICK else 800
+
+    def make_pipe():
+        rng = np.random.default_rng(11)
+        cfg = ZapRaidConfig(scheme="raid5", n_drives=4, group_size=8,
+                            chunk_blocks=1, logical_blocks=256,
+                            gc_free_segments_low=1)
+        zns = ZnsConfig(n_zones=16, zone_cap_blocks=64, block_bytes=256)
+        pipe = HandlerPipeline.build_timed(cfg, zns, seed=11)
+        pipe.precondition(
+            (lba, rng.integers(0, 256, (1, 256), dtype=np.uint8))
+            for lba in range(256)
+        )
+        return pipe
+
+    # heavy read load: ~90k IOPS across 4 drives pushes the survivors toward
+    # saturation once every failed-drive read fans out into k survivor reads
+    read_load = multi_tenant([
+        TenantSpec(name="scanner", kind="seq", n_ops=n_ops,
+                   rate_iops=60_000, read_frac=1.0, seed=31),
+        TenantSpec(name="reader", kind="uniform", n_ops=n_ops,
+                   rate_iops=30_000, read_frac=1.0, seed=32),
+    ], logical_blocks=256)
+
+    # multi-tenant fairness (healthy, mixed read/write)
+    # the writer's ON bursts (~240k IOPS) fill stripe groups faster than the
+    # append queues drain them, so inter-group barriers genuinely bind
+    pipe = make_pipe()
+    mixed = pipe.replay(multi_tenant([
+        TenantSpec(name="writer", kind="hotspot", n_ops=n_ops,
+                   rate_iops=80_000, burst_factor=3.0, seed=21),
+        TenantSpec(name="reader", kind="uniform", n_ops=n_ops,
+                   rate_iops=12_000, read_frac=1.0, seed=22),
+    ], logical_blocks=256))
+    for tenant, op in (("writer", "W"), ("reader", "R")):
+        p = mixed.percentiles(op=op, tenant=tenant)
+        emit(f"qos/tenant_{tenant}_p99", p.get("p99", 0.0),
+             f"n={p.get('n', 0)}_p50={p.get('p50', 0.0):.1f}us")
+    barrier = mixed.notes.get("group_barrier_wait_us", 0.0)
+    emit("qos/group_barrier_wait", 0.0,
+         f"total={barrier:.0f}us_groups={mixed.note_counts.get('group_barrier_wait_us', 0)}")
+
+    # degraded reads under load (same load, healthy vs one failed drive)
+    healthy = make_pipe().replay(read_load)
+    pipe = make_pipe()
+    pipe.array.fail_drive(1)
+    degraded = pipe.replay(read_load)
+    h_r = healthy.percentiles(op="R")
+    d_r = degraded.percentiles(op="R")
+    emit("qos/healthy_read_p50", h_r["p50"],
+         f"p99={h_r['p99']:.1f}us_p999={h_r['p999']:.1f}us")
+    emit("qos/degraded_read_p50", d_r["p50"],
+         f"p99={d_r['p99']:.1f}us_p999={d_r['p999']:.1f}us")
+    emit("qos/degraded_tail_inflation", 0.0,
+         f"p99_ratio={d_r['p99'] / max(h_r['p99'], 1e-9):.2f}x_vs_healthy")
+
+    # recovery under load: rebuild actor contends with the read load
+    pipe = make_pipe()
+    pipe.array.fail_drive(1)
+    pipe.schedule_rebuild(1, at=50.0)
+    rebuild = pipe.replay(read_load)
+    r_r = rebuild.percentiles(op="R")
+    emit("qos/rebuild_read_p50", r_r["p50"],
+         f"p99={r_r['p99']:.1f}us_rebuild_busy="
+         f"{rebuild.notes.get('rebuild_device_us', 0.0):.0f}us")
 
 
 # ------------------------------------------------------- batched datapath
@@ -422,14 +526,15 @@ def bench_straggler():
 ALL = [
     bench_zns_primitives, bench_write, bench_reads, bench_group_size,
     bench_raid_schemes, bench_recovery, bench_hybrid, bench_gc,
-    bench_l2p_offload, bench_trace, bench_e2e_write, bench_kernels_batched,
-    bench_kernels, bench_checkpoint, bench_straggler,
+    bench_l2p_offload, bench_trace, bench_latency_qos, bench_e2e_write,
+    bench_kernels_batched, bench_kernels, bench_checkpoint, bench_straggler,
 ]
 
 # --quick runs the cheap subset (each well under a minute on CPU)
 QUICK_SET = [
     bench_zns_primitives, bench_group_size, bench_raid_schemes,
-    bench_e2e_write, bench_kernels_batched, bench_straggler,
+    bench_trace, bench_latency_qos, bench_e2e_write, bench_kernels_batched,
+    bench_straggler,
 ]
 
 
@@ -451,15 +556,20 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="small shapes / cheap subset for CI time budgets")
     ap.add_argument("--json", default=None,
-                    help="machine-readable output path ('' to disable); "
-                         "defaults to BENCH_PR2.json for full runs, and to "
-                         "disabled for --quick/--only runs so partial sweeps "
-                         "never clobber the committed baseline")
+                    help="machine-readable output path ('' to disable). "
+                         "Defaults: --quick -> BENCH_PR3.json (the committed "
+                         "baseline: the quick set carries the latency-QoS "
+                         "acceptance figures), full -> BENCH_FULL.json, "
+                         "--only -> disabled; each command maps to one file "
+                         "so no sweep clobbers another's baseline")
     args = ap.parse_args()
     QUICK = args.quick
     json_path = args.json
     if json_path is None:
-        json_path = "" if (args.quick or args.only) else "BENCH_PR2.json"
+        if args.only:
+            json_path = ""
+        else:
+            json_path = "BENCH_PR3.json" if args.quick else "BENCH_FULL.json"
     print("name,us_per_call,derived")
     for fn in (QUICK_SET if args.quick else ALL):
         if args.only and args.only not in fn.__name__:

@@ -84,6 +84,11 @@ class ZapRaidConfig:
     interpret: bool = True
     batched: bool = True           # group-level fused encode + vectorized I/O
     append_seed: int = 1234
+    # Zone-Append completion-order source: "timed" derives the disorder from
+    # the discrete-event device model (fastest command wins the write
+    # pointer; requires a timed pipeline, repro.sim); "rng" is the seeded
+    # permutation fallback used by the standalone functional simulator.
+    append_order: str = "timed"
 
     def chunk_sizes(self) -> list[tuple[int, int]]:
         """[(seg_class, chunk_blocks)] for the open-segment classes in use."""
@@ -220,6 +225,14 @@ class ZapRAIDArray:
         self.ts_counter = 1
         self.next_seg_id = 0
         self.rng = np.random.default_rng(cfg.append_seed)
+        # Timed-pipeline hooks (repro.sim / repro.core.handlers).  When a
+        # discrete-event engine drives this array, ``append_plan_fn`` maps a
+        # Zone-Append group's ops to their timing-derived completion order
+        # (replacing the RNG permutation), and ``commit_listener`` observes
+        # every persisted stripe for latency attribution.  Both default to
+        # None: the standalone functional array is unchanged.
+        self.append_plan_fn = None   # (info, [(s_i, drive_idx)]) -> issue order
+        self.commit_listener = None  # (info, built, per_drive_off) -> None
 
         # zone allocation: per-drive free zone list (LIFO)
         self.free_zones: list[list[int]] = [
@@ -660,7 +673,12 @@ class ZapRAIDArray:
         for s_i, built in enumerate(staged):
             for drive_idx in range(info.n_drives):
                 ops.append((s_i, drive_idx))
-        order = self.rng.permutation(len(ops))
+        if self.append_plan_fn is not None:
+            # timed mode: completion order falls out of the device model --
+            # the fastest command of the batch wins the write pointer
+            order = self.append_plan_fn(info, ops)
+        else:
+            order = self.rng.permutation(len(ops))
         offsets: dict[tuple[int, int], int] = {}
         crashed = None
         for oi in order:
@@ -731,6 +749,8 @@ class ZapRAIDArray:
                     self.l2p.set(lba, pba)
                     rec.valid[drive_idx, didx] = True
                     rec.valid_count += 1
+        if self.commit_listener is not None:
+            self.commit_listener(info, built, per_drive_off)
 
     def _invalidate(self, pba: int) -> None:
         seg_id, drive, off = unpack_pba(pba)

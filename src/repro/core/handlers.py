@@ -2,23 +2,38 @@
 
 The paper decomposes request handling into seven handlers on SPDK threads:
 dispatch, device I/O, completion, indexing, encoding, segment-state tracking,
-and cleaning.  This module provides the same decomposition as an explicit
-event pipeline over the functional array -- the form a real async runtime
-(asyncio / SPDK reactors / TPU host offload threads) would schedule.  The
-synchronous simulator executes stages inline; the *structure* (who produces
-which event for whom, and what state each stage owns) matches the paper:
+and cleaning.  This module provides that decomposition in two modes:
 
-  dispatch        -> classifies writes (hybrid §3.3), fills in-flight stripes,
-                     emits ENCODE when a stripe's k data chunks are ready
-  encoding        -> parity generation (Pallas XOR/GF(256)), emits DEV_IO
-  device I/O      -> Zone Write / Zone Append submission + completion polling
-  completion      -> per-request completion tracking; degraded-read decode
-  indexing        -> L2P queries/updates, CLOCK offloading, write acks
-  segment state   -> header/footer writes, group barriers, sealing
-  cleaning        -> GC trigger + valid-block rewrite
+**Synchronous mode** (``engine=None``) -- the original explicit event
+pipeline over the functional array: each ``tick()`` drains one round of
+events, stages execute inline, counters expose per-stage activity.
 
-Each ``tick()`` drains one round of events; counters expose per-stage
-activity for the benchmarks.
+**Timed mode** (``engine=``:class:`repro.sim.Engine`) -- the stages become
+producers/consumers of *scheduled events* on a discrete-event engine:
+
+  dispatch        -> fires at the request's arrival time; classifies writes,
+                     fills in-flight stripes (functional), registers the
+                     request as pending until its stripe persists
+  encoding        -> accounted per committed stripe (Pallas parity path)
+  device I/O      -> every Zone Write / Zone Append / read books service
+                     time on the TimedDrive queues (one Zone Write in
+                     flight per zone, qd<=4 Zone Appends per zone); group
+                     commits get their completion *order* from the booked
+                     times -- the fastest append wins the write pointer
+  completion      -> write acks fire at the stripe's device completion
+                     time (+ host CPU cost); reads at their device time
+  indexing        -> L2P updates ride the commit event; acks call back
+  segment state   -> group barriers are real waits (a group's appends
+                     cannot start before the previous group fully landed);
+                     the periodic examination maps to timeout flush ticks
+  cleaning        -> GC runs inline on the same virtual timeline, its I/O
+                     contending with foreground traffic on the drives
+
+Latency attribution works through two array hooks (``commit_listener``,
+``append_plan_fn``) rather than rewriting the functional array as
+coroutines: state changes execute instantly, device time is booked forward,
+and later events observe the bookings as queueing delay (see
+``repro.sim.engine``).
 """
 from __future__ import annotations
 
@@ -28,7 +43,8 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
-from repro.core.array import ZapRAIDArray
+from repro.core.array import ZapRaidConfig, ZapRAIDArray
+from repro.core.zns import ZnsConfig
 
 
 @dataclasses.dataclass
@@ -38,29 +54,275 @@ class Event:
     callback: Optional[Callable] = None
 
 
+@dataclasses.dataclass
+class _PendingWrite:
+    """A submitted write waiting for its stripe(s) to persist."""
+
+    tenant: str
+    t_submit: float
+    t_dispatch: float
+    remaining: set          # lbas not yet durably committed
+    callback: Optional[Callable]
+    t_done: float = 0.0     # max device completion over covering stripes
+    buffer_wait_us: float = 0.0
+    device_us: float = 0.0
+
+
 class HandlerPipeline:
     """Event-driven facade over ZapRAIDArray mirroring the paper's stages."""
 
     STAGES = ("dispatch", "encoding", "device_io", "completion",
               "indexing", "segment_state", "cleaning")
 
-    def __init__(self, array: ZapRAIDArray):
+    def __init__(
+        self,
+        array: ZapRAIDArray,
+        engine=None,
+        recorder=None,
+        flush_interval_us: float = 1000.0,
+    ):
         self.array = array
         self.queues: dict[str, collections.deque] = {
             s: collections.deque() for s in self.STAGES
         }
         self.counters = {s: 0 for s in self.STAGES}
         self.completed: list[Any] = []
+        self.engine = engine
+        self.recorder = recorder
+        self.flush_interval_us = flush_interval_us
+        if engine is not None:
+            if recorder is None:
+                from repro.sim.stats import LatencyRecorder
+                self.recorder = LatencyRecorder()
+            self.service = array.drives[0].service
+            self._pending: dict[int, list[_PendingWrite]] = {}
+            self._open_reqs = 0
+            self._barriers: dict[int, float] = {}  # seg_id -> group-done time
+            self._last_write_dispatch = 0.0
+            array.commit_listener = self._on_stripe_commit
+            if array.cfg.append_order == "timed":
+                array.append_plan_fn = self._plan_group
+
+    # -- construction ---------------------------------------------------------
+
+    @classmethod
+    def build_timed(
+        cls,
+        cfg: ZapRaidConfig,
+        zns_cfg: ZnsConfig,
+        *,
+        engine=None,
+        service=None,
+        recorder=None,
+        seed: int = 0,
+        flush_interval_us: float = 1000.0,
+    ) -> "HandlerPipeline":
+        """Construct engine + timed drives + array + pipeline in one call."""
+        from repro.sim.device import make_timed_drives
+        from repro.sim.engine import Engine
+        engine = engine or Engine()
+        drives = make_timed_drives(
+            cfg.n_drives, zns_cfg, engine, service=service, seed=seed
+        )
+        array = ZapRAIDArray(cfg, zns_cfg, drives=drives)
+        return cls(array, engine=engine, recorder=recorder,
+                   flush_interval_us=flush_interval_us)
 
     # -- submission (application-facing, like the bdev layer) ---------------
 
-    def submit_write(self, lba: int, data: np.ndarray, cb=None):
-        self.queues["dispatch"].append(Event("WRITE", (lba, data), cb))
+    def submit_write(self, lba: int, data: np.ndarray, cb=None, *,
+                     at: Optional[float] = None, tenant: str = "host"):
+        if self.engine is None:
+            self.queues["dispatch"].append(Event("WRITE", (lba, data), cb))
+            return
+        t = self.engine.now if at is None else at
+        self._open_reqs += 1
+        # dispatch fires after the host-side submission cost; latency is
+        # still measured from the arrival instant t
+        self.engine.at(t + self.service.cpu_dispatch_us,
+                       self._ev_write, lba, data, cb, tenant, t)
 
-    def submit_read(self, lba: int, n_blocks: int = 1, cb=None):
-        self.queues["dispatch"].append(Event("READ", (lba, n_blocks), cb))
+    def submit_read(self, lba: int, n_blocks: int = 1, cb=None, *,
+                    at: Optional[float] = None, tenant: str = "host"):
+        if self.engine is None:
+            self.queues["dispatch"].append(Event("READ", (lba, n_blocks), cb))
+            return
+        t = self.engine.now if at is None else at
+        self._open_reqs += 1
+        self.engine.at(t + self.service.cpu_dispatch_us,
+                       self._ev_read, lba, n_blocks, cb, tenant, t)
 
-    # -- stages --------------------------------------------------------------
+    # -- timed-mode events ---------------------------------------------------
+
+    def _ev_write(self, lba: int, data: np.ndarray, cb, tenant: str, t_submit: float):
+        eng = self.engine
+        self.counters["dispatch"] += 1
+        self._last_write_dispatch = eng.now
+        n = data.shape[0] if data.ndim == 2 else 1
+        req = _PendingWrite(
+            tenant=tenant, t_submit=t_submit, t_dispatch=eng.now,
+            remaining=set(range(lba, lba + n)), callback=cb,
+        )
+        for l in req.remaining:
+            self._pending.setdefault(l, []).append(req)
+        self.recorder.notes["W_blocks"] = self.recorder.notes.get("W_blocks", 0) + n
+        # functional write at the dispatch instant; commits triggered by it
+        # (stripe fills, group barriers, GC) book device time forward and
+        # resolve pending requests through the commit listener
+        self.array.write(lba, data)
+
+    def _ev_read(self, lba: int, n_blocks: int, cb, tenant: str, t_submit: float):
+        eng = self.engine
+        self.counters["dispatch"] += 1
+        self.counters["device_io"] += 1
+        mark = eng.mark_io()
+        out = self.array.read(lba, n_blocks)
+        t_dev = max(eng.io_watermark, eng.now)
+        self.recorder.notes["R_blocks"] = self.recorder.notes.get("R_blocks", 0) + n_blocks
+        eng.at(t_dev + self.service.cpu_complete_us, self._ev_read_done,
+               lba, out, cb, tenant, t_submit, t_dev - mark)
+
+    def _ev_read_done(self, lba, out, cb, tenant, t_submit, device_us):
+        self.counters["completion"] += 1
+        self.completed.append((lba, out))
+        self.recorder.record(tenant, "R", t_submit, self.engine.now,
+                             stages={"device_us": device_us})
+        self._open_reqs -= 1
+        if cb:
+            cb(out)
+
+    def _ev_write_done(self, req: _PendingWrite):
+        self.counters["completion"] += 1
+        self.counters["indexing"] += 1
+        self.recorder.record(
+            req.tenant, "W", req.t_submit, self.engine.now,
+            stages={"buffer_wait_us": req.buffer_wait_us,
+                    "device_us": req.device_us},
+        )
+        self._open_reqs -= 1
+        if req.callback:
+            req.callback(self.engine.now)
+
+    def _ev_flush_tick(self):
+        """Timeout path (paper: periodic in-flight examination): pad+commit
+        staged stripes when no *write* has arrived for one interval (read
+        traffic must not keep half-filled stripes pinned in the buffer)."""
+        if self.engine.now - self._last_write_dispatch >= self.flush_interval_us:
+            self.array.flush()
+            self.counters["segment_state"] += 1
+            self.array.maybe_gc()
+            self.counters["cleaning"] += 1
+
+    # -- array hooks (timed mode) -------------------------------------------
+
+    def _plan_group(self, info, ops):
+        """Zone-Append group planner: real barrier wait + timing-driven order."""
+        from repro.sim.device import plan_group_appends
+        eng = self.engine
+        barrier = self._barriers.get(info.seg_id, 0.0)
+        floor = max(eng.now, barrier)
+        if barrier > eng.now:
+            self.recorder.note("group_barrier_wait_us", barrier - eng.now)
+        order, group_done = plan_group_appends(
+            self.array.drives, info.zone_ids, ops, info.chunk_blocks, floor
+        )
+        self._barriers[info.seg_id] = group_done
+        self.counters["segment_state"] += 1
+        return order
+
+    def _on_stripe_commit(self, info, built, per_drive_off):
+        """Resolve pending writes covered by a just-persisted stripe."""
+        eng = self.engine
+        self.counters["encoding"] += 1
+        self.counters["device_io"] += len(per_drive_off)
+        t_done = eng.now
+        for d, off in per_drive_off.items():
+            t = self.array.drives[d].chunk_completion(info.zone_ids[d], off)
+            if t is not None and t > t_done:
+                t_done = t
+        for lba in built["lbas"].ravel():
+            lba = int(lba)
+            if lba < 0:
+                continue
+            reqs = self._pending.pop(lba, None)
+            if not reqs:
+                continue
+            for req in reqs:
+                req.t_done = max(req.t_done, t_done)
+                req.buffer_wait_us = max(req.buffer_wait_us, eng.now - req.t_dispatch)
+                req.device_us = max(req.device_us, t_done - eng.now)
+                req.remaining.discard(lba)
+                if not req.remaining:
+                    eng.at(req.t_done + self.service.cpu_complete_us,
+                           self._ev_write_done, req)
+
+    # -- workload replay (timed mode) ---------------------------------------
+
+    def replay(self, requests, payload_fn=None):
+        """Replay a :mod:`repro.sim.workload` request stream to completion.
+
+        Writes carry deterministic pseudo-random payloads unless
+        ``payload_fn(request) -> (n_blocks, block_bytes) uint8`` is given.
+        Returns the latency recorder."""
+        assert self.engine is not None, "replay requires a timed pipeline"
+        bb = self.array.zns_cfg.block_bytes
+        rng = np.random.default_rng(0xFEED)
+        t_end = 0.0
+        for r in requests:
+            t_end = max(t_end, r.t_us)
+            if r.op == "W":
+                data = (payload_fn(r) if payload_fn else
+                        rng.integers(0, 256, (r.n_blocks, bb), dtype=np.uint8))
+                self.submit_write(r.lba, data, at=r.t_us, tenant=r.tenant)
+            else:
+                self.submit_read(r.lba, r.n_blocks, at=r.t_us, tenant=r.tenant)
+        if self.flush_interval_us:
+            t = self.flush_interval_us
+            while t <= t_end + self.flush_interval_us:
+                self.engine.at(t, self._ev_flush_tick)
+                t += self.flush_interval_us
+        self.drain()
+        return self.recorder
+
+    def precondition(self, writes) -> None:
+        """Install media state outside the measured timeline.
+
+        ``writes`` is an iterable of ``(lba, data)``.  The functional writes
+        execute instantly, then every device-time booking -- and every
+        recorder note / stage counter the warm-up produced -- is discarded,
+        so the measured workload starts against a warm array on idle drives
+        with clean stats."""
+        assert self.engine is not None
+        for lba, data in writes:
+            self.array.write(lba, data)
+        self.array.flush()
+        for d in self.array.drives:
+            d.reset_timing()
+        self._barriers.clear()
+        rec = self.recorder
+        rec.samples.clear()
+        rec.stage_sums.clear()
+        rec.stage_counts.clear()
+        rec.notes.clear()
+        rec.note_counts.clear()
+        self.counters = {s: 0 for s in self.STAGES}
+
+    # -- failure/rebuild actors (timed mode) --------------------------------
+
+    def schedule_drive_failure(self, drive_idx: int, at: float) -> None:
+        self.engine.at(at, self.array.fail_drive, drive_idx)
+
+    def schedule_rebuild(self, drive_idx: int, at: float) -> None:
+        """Full-drive rebuild as an engine actor contending for device time."""
+        self.engine.at(at, self._ev_rebuild, drive_idx)
+
+    def _ev_rebuild(self, drive_idx: int) -> None:
+        eng = self.engine
+        mark = eng.mark_io()
+        self.array.rebuild_drive(drive_idx)
+        self.recorder.note("rebuild_device_us", max(0.0, eng.io_watermark - mark))
+
+    # -- stages (synchronous mode) ------------------------------------------
 
     def _dispatch(self, ev: Event):
         if ev.kind == "WRITE":
@@ -106,6 +368,8 @@ class HandlerPipeline:
 
     def tick(self, flush: bool = False) -> int:
         """Drain one round of events (one 'poll loop' iteration)."""
+        if self.engine is not None:
+            return self.engine.run()
         n = 0
         for stage, fn in (
             ("dispatch", self._dispatch),
@@ -126,6 +390,21 @@ class HandlerPipeline:
         return n
 
     def drain(self) -> None:
+        if self.engine is not None:
+            eng = self.engine
+            eng.run()
+            for _ in range(64):
+                if not self._open_reqs:
+                    break
+                # quiesce: timeout-flush whatever is still staged, then let
+                # the resulting ack events fire
+                self.array.flush()
+                self.counters["segment_state"] += 1
+                self.array.maybe_gc()
+                self.counters["cleaning"] += 1
+                eng.run()
+            assert not self._open_reqs, "timed drain left unresolved requests"
+            return
         while self.tick():
             pass
         self.tick(flush=True)

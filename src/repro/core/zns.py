@@ -49,6 +49,14 @@ class DriveFailed(Exception):
     """Raised when reading a failed drive."""
 
 
+class TooManyOpenZones(Exception):
+    """Raised when opening a zone would exceed ``ZnsConfig.max_open_zones``.
+
+    The paper (§2.1) bounds the number of simultaneously open zones -- the
+    device holds per-open-zone buffer/XOR resources -- so the controller must
+    seal or reset before opening more."""
+
+
 @dataclasses.dataclass
 class ZnsConfig:
     n_zones: int = 16
@@ -104,6 +112,17 @@ class SimZnsDrive:
 
     def open_zone_count(self) -> int:
         return int(np.sum(self.state == ZoneState.OPEN))
+
+    def _open_zone(self, zone: int) -> None:
+        """EMPTY -> OPEN transition, enforcing the bounded-open-zones limit."""
+        if self.state[zone] != ZoneState.EMPTY:
+            return
+        if self.open_zone_count() >= self.cfg.max_open_zones:
+            raise TooManyOpenZones(
+                f"drive {self.drive_id}: opening zone {zone} would exceed "
+                f"max_open_zones={self.cfg.max_open_zones}"
+            )
+        self.state[zone] = ZoneState.OPEN
 
     def reset_zone(self, zone: int) -> None:
         self._check_alive()
@@ -164,14 +183,12 @@ class SimZnsDrive:
             raise ValueError(
                 f"zone_write offset {offset} != wp {int(self.wp[zone])} (zone {zone})"
             )
-        if self.state[zone] == ZoneState.EMPTY:
-            self.state[zone] = ZoneState.OPEN
+        self._open_zone(zone)
         self._commit_blocks(zone, blocks, oobs)
 
     def zone_append_begin(self, zone: int) -> None:
         self._check_alive()
-        if self.state[zone] == ZoneState.EMPTY:
-            self.state[zone] = ZoneState.OPEN
+        self._open_zone(zone)
 
     def zone_append_commit(self, zone: int, blocks: np.ndarray, oobs: np.ndarray) -> int:
         """Commit one append command (a contiguous chunk); returns its offset.
@@ -181,6 +198,7 @@ class SimZnsDrive:
         guarantees that each command lands contiguously at the current wp.
         """
         self._check_alive()
+        self._open_zone(zone)
         off = int(self.wp[zone])
         self._commit_blocks(zone, blocks, oobs)
         return off
@@ -212,8 +230,18 @@ class SimZnsDrive:
         self.failed = True
 
     def replace(self) -> None:
-        """Swap in a fresh drive (same identity, empty media)."""
-        self.__init__(self.cfg, self.drive_id, self.budget)
+        """Swap in a fresh drive (same identity, empty media).
+
+        Lifetime counters (``blocks_written``, ``zone_resets``) are carried
+        over: they account the *array slot's* device traffic, and resetting
+        them on a swap would corrupt write-amplification accounting across a
+        rebuild."""
+        self.data[:] = 0
+        self.oob[:] = np.zeros((), dtype=OOB_DTYPE)
+        self.oob["lba"] = INVALID_LBA
+        self.wp[:] = 0
+        self.state[:] = ZoneState.EMPTY
+        self.failed = False
 
 
 def make_array_drives(

@@ -1,0 +1,140 @@
+"""Per-request latency recording for the timed engine.
+
+``LatencyRecorder`` collects one sample per completed request -- tenant, op,
+submit and completion virtual times, and an optional per-stage breakdown
+(buffer wait, device queueing, device service, post-processing) -- and
+reduces them to the distribution figures the paper reports: p50/p95/p99/p999,
+mean, max.  ``to_bench_rows`` emits ``(name, us, derived)`` tuples in the
+exact shape ``benchmarks.run`` prints and serializes, so timed scenarios
+drop into the ``BENCH_*.json`` perf-trajectory format unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import defaultdict
+from typing import Optional
+
+import numpy as np
+
+PERCENTILES = (50.0, 95.0, 99.0, 99.9)
+_PCT_NAMES = ("p50", "p95", "p99", "p999")
+
+
+@dataclasses.dataclass(frozen=True)
+class Sample:
+    tenant: str
+    op: str               # "R" | "W"
+    t_submit: float
+    t_done: float
+
+    @property
+    def latency_us(self) -> float:
+        return self.t_done - self.t_submit
+
+
+class LatencyRecorder:
+    def __init__(self):
+        self.samples: list[Sample] = []
+        self.stage_sums: dict[str, float] = defaultdict(float)
+        self.stage_counts: dict[str, int] = defaultdict(int)
+        self.notes: dict[str, float] = defaultdict(float)
+        self.note_counts: dict[str, int] = defaultdict(int)
+
+    # -- collection ---------------------------------------------------------
+
+    def record(
+        self,
+        tenant: str,
+        op: str,
+        t_submit: float,
+        t_done: float,
+        stages: Optional[dict[str, float]] = None,
+    ) -> None:
+        self.samples.append(Sample(tenant, op, t_submit, t_done))
+        for k, v in (stages or {}).items():
+            self.stage_sums[k] += v
+            self.stage_counts[k] += 1
+
+    def note(self, key: str, value_us: float) -> None:
+        """Accumulate an engine-level delay (e.g. group-barrier waits)."""
+        self.notes[key] += value_us
+        self.note_counts[key] += 1
+
+    # -- reduction ----------------------------------------------------------
+
+    def latencies(self, op: Optional[str] = None, tenant: Optional[str] = None) -> np.ndarray:
+        return np.array([
+            s.latency_us for s in self.samples
+            if (op is None or s.op == op) and (tenant is None or s.tenant == tenant)
+        ])
+
+    def percentiles(self, op: Optional[str] = None, tenant: Optional[str] = None) -> dict:
+        """{n, mean, max, p50, p95, p99, p999} over the selected samples."""
+        lat = self.latencies(op, tenant)
+        if lat.size == 0:
+            return {"n": 0}
+        out = {"n": int(lat.size), "mean": float(lat.mean()), "max": float(lat.max())}
+        for name, q in zip(_PCT_NAMES, np.percentile(lat, PERCENTILES)):
+            out[name] = float(q)
+        return out
+
+    def stage_means(self) -> dict[str, float]:
+        return {
+            k: self.stage_sums[k] / max(1, self.stage_counts[k])
+            for k in sorted(self.stage_sums)
+        }
+
+    def span_us(self) -> float:
+        if not self.samples:
+            return 0.0
+        return max(s.t_done for s in self.samples) - min(s.t_submit for s in self.samples)
+
+    def throughput_mib_s(self, block_bytes: int, op: str = "W") -> float:
+        """Goodput over the virtual-time span.  Block count comes from the
+        ``"{op}_blocks"`` note when the pipeline recorded one (multi-block
+        requests), else falls back to one block per sample."""
+        span = self.span_us()
+        if span <= 0:
+            return 0.0
+        n = self.notes.get(f"{op}_blocks", float(len(self.latencies(op))))
+        return n * block_bytes / (span / 1e6) / (1 << 20)
+
+    # -- export -------------------------------------------------------------
+
+    def summary(self) -> dict:
+        tenants = sorted({s.tenant for s in self.samples})
+        out = {
+            "ops": {op: self.percentiles(op=op) for op in ("R", "W")},
+            "tenants": {
+                t: {op: self.percentiles(op=op, tenant=t) for op in ("R", "W")}
+                for t in tenants
+            },
+            "stage_means_us": self.stage_means(),
+            "notes_us": {
+                k: {"total": self.notes[k], "count": self.note_counts[k]}
+                for k in sorted(self.notes)
+            },
+        }
+        return out
+
+    def to_bench_rows(self, prefix: str) -> list[tuple[str, float, str]]:
+        """(name, us_per_call, derived) rows, BENCH_*.json-compatible."""
+        rows = []
+        for op, tag in (("W", "write"), ("R", "read")):
+            p = self.percentiles(op=op)
+            if p.get("n"):
+                rows.append((
+                    f"{prefix}/{tag}_p50", p["p50"],
+                    f"p99={p['p99']:.1f}us_p999={p['p999']:.1f}us_n={p['n']}",
+                ))
+        return rows
+
+    def to_json(self, path: str, prefix: str) -> None:
+        out = {
+            name: {"us_per_call": round(us, 2), "derived": derived}
+            for name, us, derived in self.to_bench_rows(prefix)
+        }
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+            f.write("\n")
