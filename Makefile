@@ -1,7 +1,7 @@
 PYTHONPATH := src
 PY := PYTHONPATH=$(PYTHONPATH) python
 
-.PHONY: test test-fast bench bench-quick
+.PHONY: test test-fast bench bench-quick bench-check
 
 # Tier-1 verify: the whole suite, stop on first failure.
 test:
@@ -16,6 +16,11 @@ bench:
 	$(PY) -m benchmarks.run
 
 # Cheap subset with small shapes for CI time budgets; rewrites the committed
-# BENCH_PR3.json baseline (the quick set carries the latency-QoS figures).
+# BENCH_PR4.json baseline (the quick set carries the perf acceptance figures).
 bench-quick:
 	$(PY) -m benchmarks.run --quick
+
+# CI regression gate: rerun the quick set, fail on >25% wall-clock regression
+# against the committed baseline (writes no JSON).
+bench-check:
+	$(PY) -m benchmarks.run --check BENCH_PR4.json

@@ -24,13 +24,22 @@ LSB-discrimination trick as the paper (which relies on 4 KiB alignment).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import numpy as np
 
 from repro.core import segment as seg_mod
 from repro.core.group_layout import CompactStripeTable
-from repro.core.l2p import NO_PBA, L2PTable, pack_pba, unpack_pba, unpack_pba_many
+from repro.core.l2p import (
+    NO_PBA,
+    L2PTable,
+    pack_pba,
+    pack_pba_many,
+    unpack_pba,
+    unpack_pba_many,
+)
+from repro.kernels import ops as kops
 from repro.core.raid import (
     StripeCodec,
     decode_meta,
@@ -83,6 +92,12 @@ class ZapRaidConfig:
     use_pallas: bool = False
     interpret: bool = True
     batched: bool = True           # group-level fused encode + vectorized I/O
+    # double-buffered group commits: the fused encode for group g+1 is
+    # dispatched (JAX async, donated buffers) before group g's chunks are
+    # committed to the drives, with explicit syncs at reads, flush, seal, GC
+    # and crash-arming.  Only active on the untimed functional path (the
+    # timed pipeline's group barrier is already a sync point).
+    overlap: bool = True
     append_seed: int = 1234
     # Zone-Append completion-order source: "timed" derives the disorder from
     # the discrete-event device model (fastest command wins the write
@@ -115,6 +130,13 @@ class Stats:
     gc_blocks_moved: int = 0
     recovery_blocks_read: int = 0
     meta_blocks_written: int = 0
+    # host<->device transfer accounting (bumped by the codec): the
+    # device-resident datapath's figure of merit is copies *per group*, not
+    # per stripe -- see bench_read_batched / DESIGN.md §9.
+    h2d_copies: int = 0
+    h2d_bytes: int = 0
+    d2h_copies: int = 0
+    d2h_bytes: int = 0
 
     def write_amp(self) -> float:
         if self.host_blocks_written == 0:
@@ -122,18 +144,91 @@ class Stats:
         return self.device_blocks_written / self.host_blocks_written
 
 
-class _InFlightStripe:
-    """Accumulates k*C data blocks before encode+commit (paper §3.1)."""
+class _StripeArena:
+    """Preallocated int32-packed staging arena for one segment class.
 
-    def __init__(self, k: int, chunk_blocks: int, block_bytes: int):
+    Host blocks are packed exactly once: ``write()`` slice-assigns payload
+    bytes into ``pay_u8``, which is a dtype *view* of the int32 lane buffer
+    ``pay_i32`` the fused group encode consumes -- no ``np.stack``, no
+    re-packing, no per-stripe allocation on the steady-state path.  Slot 0 is
+    a permanently-zero row used to pad partial groups up to the codec's
+    power-of-two shape buckets with a single fancy-index gather.
+
+    Sized for two full stripe groups plus slack: one group staged in the
+    segment's ``group_buffer`` while the previous (double-buffered) group is
+    still pending commit, plus the in-flight stripe.
+    """
+
+    def __init__(self, k: int, chunk_blocks: int, block_bytes: int, group_size: int):
+        assert block_bytes % 4 == 0, "int32 lane packing needs 4-byte blocks"
+        self.k = k
+        self.c = chunk_blocks
+        self.n_slots = 2 * max(group_size, 1) + 4
+        lanes = chunk_blocks * block_bytes // 4
+        self.pay_i32 = np.zeros((self.n_slots, k, lanes), dtype=np.int32)
+        self.pay_u8 = self.pay_i32.view(np.uint8).reshape(
+            self.n_slots, k * chunk_blocks, block_bytes
+        )
+        cap = k * chunk_blocks
+        self.lbas = np.full((self.n_slots, cap), -1, dtype=np.int64)
+        self.ts = np.zeros((self.n_slots, cap), dtype=np.uint64)
+        self.gids = np.full((self.n_slots, cap), -1, dtype=np.int64)
+        self._free = list(range(self.n_slots - 1, 0, -1))  # slot 0 = zero pad
+
+    def acquire(self) -> Optional[int]:
+        return self._free.pop() if self._free else None
+
+    def release(self, slot: int) -> None:
+        self._free.append(slot)
+
+    def gather_packed(self, slots: np.ndarray) -> np.ndarray:
+        """(len(slots), k, lanes) int32 gather -- the fused-encode input."""
+        return self.pay_i32[slots]
+
+
+class _InFlightStripe:
+    """Accumulates k*C data blocks before encode+commit (paper §3.1).
+
+    Backed by a :class:`_StripeArena` slot when one is available (the
+    batched datapath), falling back to private arrays otherwise (legacy
+    datapath, or a drained arena)."""
+
+    def __init__(
+        self,
+        k: int,
+        chunk_blocks: int,
+        block_bytes: int,
+        arena: Optional[_StripeArena] = None,
+    ):
         self.k = k
         self.c = chunk_blocks
         self.capacity = k * chunk_blocks
-        self.blocks = np.zeros((self.capacity, block_bytes), dtype=np.uint8)
-        self.lbas = np.full(self.capacity, -1, dtype=np.int64)  # -1 = padding
-        self.ts = np.zeros(self.capacity, dtype=np.uint64)
+        self.arena = None
+        self.slot = None
+        if arena is not None:
+            slot = arena.acquire()
+            if slot is not None:
+                self.arena, self.slot = arena, slot
+                self.blocks = arena.pay_u8[slot]
+                self.lbas = arena.lbas[slot]
+                self.ts = arena.ts[slot]
+                self.meta_gids = arena.gids[slot]
+                # reused slot: reset staging metadata in place (payload bytes
+                # are overwritten on add / zeroed by pad_to_full)
+                self.lbas[:] = -1
+                self.ts[:] = 0
+                self.meta_gids[:] = -1
+        if self.arena is None:
+            self.blocks = np.zeros((self.capacity, block_bytes), dtype=np.uint8)
+            self.lbas = np.full(self.capacity, -1, dtype=np.int64)  # -1 = padding
+            self.ts = np.zeros(self.capacity, dtype=np.uint64)
+            self.meta_gids = np.full(self.capacity, -1, dtype=np.int64)
         self.fill = 0
-        self.meta_gids = np.full(self.capacity, -1, dtype=np.int64)
+
+    def release(self) -> None:
+        if self.arena is not None:
+            self.arena.release(self.slot)
+            self.arena = None
 
     def add(self, lba: int, block: np.ndarray, ts: int, meta_gid: int = -1) -> None:
         i = self.fill
@@ -162,7 +257,11 @@ class _InFlightStripe:
         return self.fill == self.capacity
 
     def pad_to_full(self) -> int:
+        """Flush path: pad in place -- zero the unfilled arena tail directly
+        instead of staging explicit padding blocks through a second copy."""
         pad = self.capacity - self.fill
+        if pad and self.arena is not None:
+            self.blocks[self.fill :] = 0  # reused slot may hold stale payload
         self.fill = self.capacity
         return pad
 
@@ -217,11 +316,12 @@ class ZapRAIDArray:
         self.codec = StripeCodec(
             self.scheme, use_pallas=cfg.use_pallas, interpret=cfg.interpret
         )
+        self.stats = Stats()
+        self.codec.copy_stats = self.stats
         self.budget = CrashBudget(None)
         self.drives = drives or make_array_drives(cfg.n_drives, zns_cfg, self.budget)
         for d in self.drives:
             d.budget = self.budget
-        self.stats = Stats()
         self.ts_counter = 1
         self.next_seg_id = 0
         self.rng = np.random.default_rng(cfg.append_seed)
@@ -233,6 +333,11 @@ class ZapRAIDArray:
         # None: the standalone functional array is unchanged.
         self.append_plan_fn = None   # (info, [(s_i, drive_idx)]) -> issue order
         self.commit_listener = None  # (info, built, per_drive_off) -> None
+        # Observes every fused-encode sync: (info, n_stripes, host_us).  The
+        # timed pipeline uses it to thread encode completions through the
+        # engine's accounting so latency stats stay honest about host-side
+        # codec stalls (virtual time is unaffected: the encode is host work).
+        self.encode_listener = None
 
         # zone allocation: per-drive free zone list (LIFO)
         self.free_zones: list[list[int]] = [
@@ -259,6 +364,10 @@ class ZapRAIDArray:
             entries_per_group=zns_cfg.block_bytes // 4,
         )
         self._in_flight: dict[int, _InFlightStripe] = {}  # per segment class
+        # device-resident staging: one packed arena per segment class, and at
+        # most one built-but-uncommitted (double-buffered) stripe group
+        self._arenas: dict[int, _StripeArena] = {}
+        self._pending_group: Optional[dict] = None
         # Latest committed write-timestamp per LBA / mapping group.  Commits
         # can complete out of order across segments (a buffered Zone-Append
         # group lands after a later Zone-Write stripe), so L2P updates are
@@ -379,6 +488,27 @@ class ZapRAIDArray:
             else self.cfg.large_chunk_blocks
         )
 
+    def _group_size_for(self, seg_class: int) -> int:
+        if not self.cfg.hybrid:
+            return self.cfg.group_size
+        return self.cfg.group_size if seg_class == int(SegmentClass.SMALL) else 1
+
+    def _new_stripe(self, seg_class: int) -> _InFlightStripe:
+        """Fresh in-flight stripe, arena-backed on the batched datapath."""
+        arena = None
+        if self.cfg.batched and self.zns_cfg.block_bytes % 4 == 0:
+            arena = self._arenas.get(seg_class)
+            if arena is None:
+                arena = _StripeArena(
+                    self.scheme.k, self._chunk_blocks_for(seg_class),
+                    self.zns_cfg.block_bytes, self._group_size_for(seg_class),
+                )
+                self._arenas[seg_class] = arena
+        return _InFlightStripe(
+            self.scheme.k, self._chunk_blocks_for(seg_class),
+            self.zns_cfg.block_bytes, arena,
+        )
+
     def _append_block(
         self, seg_class: int, lba: int, block: np.ndarray, ts: int, meta_gid: int = -1
     ) -> None:
@@ -391,10 +521,7 @@ class ZapRAIDArray:
                 old_stripe.lbas[slot] = -1  # cancel: becomes padding
         stripe = self._in_flight.get(seg_class)
         if stripe is None:
-            stripe = _InFlightStripe(
-                self.scheme.k, self._chunk_blocks_for(seg_class),
-                self.zns_cfg.block_bytes,
-            )
+            stripe = self._new_stripe(seg_class)
             self._in_flight[seg_class] = stripe
         if lba >= 0:
             self._buffered[lba] = (stripe, stripe.fill)
@@ -417,10 +544,7 @@ class ZapRAIDArray:
         while i < n:
             stripe = self._in_flight.get(seg_class)
             if stripe is None:
-                stripe = _InFlightStripe(
-                    self.scheme.k, self._chunk_blocks_for(seg_class),
-                    self.zns_cfg.block_bytes,
-                )
+                stripe = self._new_stripe(seg_class)
                 self._in_flight[seg_class] = stripe
             take = min(stripe.capacity - stripe.fill, n - i)
             base = stripe.fill
@@ -452,6 +576,9 @@ class ZapRAIDArray:
                 if ost.group_buffer:
                     self._commit_group(ost)
                     progressed = True
+            if self._pending_group is not None:
+                self._sync_pending()
+                progressed = True
 
     def flush(self) -> None:
         """Timeout path (§3.5): pad partial in-flight stripes and commit, then
@@ -483,6 +610,13 @@ class ZapRAIDArray:
         self._rr_small += 1
         return self.open_segments[sid]
 
+    def _pending_count(self, ost: _OpenSegment) -> int:
+        """Stripes built-but-uncommitted (double-buffered) for this segment."""
+        pend = self._pending_group
+        if pend is not None and pend["ost"] is ost:
+            return len(pend["seqs"])
+        return 0
+
     def _dispatch_stripe(self, seg_class: int) -> None:
         stripe = self._in_flight.pop(seg_class)
         ost = self._select_segment(seg_class)
@@ -491,12 +625,17 @@ class ZapRAIDArray:
             # group-commit time so on-disk timestamps reflect commit order.
             ost.group_buffer.append(stripe)
             gsz = ost.info.group_size
-            staged = ost.info.stripes_written + len(ost.group_buffer)
+            staged = (
+                ost.info.stripes_written
+                + self._pending_count(ost)
+                + len(ost.group_buffer)
+            )
             if staged % gsz == 0 or staged == ost.info.n_stripes:
                 self._commit_group(ost)
         else:
             built = self._build_stripe(ost, stripe, ost.info.stripes_written)
             self._commit_zone_write(ost, built)
+            stripe.release()
         self._maybe_seal(ost)
 
     # -- stripe construction ---------------------------------------------------
@@ -558,40 +697,61 @@ class ZapRAIDArray:
             "meta_gids": stripe.meta_gids.reshape(k, c),
         }
 
-    def _build_stripes(
+    def _build_group(
         self, ost: _OpenSegment, raws: list[_InFlightStripe], seq0: int
-    ) -> list[dict]:
-        """Batched ``_build_stripe``: one fused parity encode (payload and OOB
-        metadata alike) for all S staged stripes of a group.
+    ) -> dict:
+        """Build a whole stripe group and *dispatch* its fused parity encode.
 
-        Produces dicts bit-identical to calling ``_build_stripe`` per stripe
-        in staging order -- same commit-timestamp sequence, same cancellation
-        of superseded buffered copies -- but the codec is entered once with a
-        (S, k, c*block_bytes) tensor instead of S times.
+        Bit-identical to the per-stripe ``_build_stripe`` loop -- same commit
+        timestamp sequence, same cancellation of superseded buffered copies,
+        same completion-order draw -- but the payload is gathered from the
+        int32-packed staging arena in one fancy index (power-of-two bucketed
+        via the arena's permanent zero slot) and handed to the codec's
+        donating async entry point.  The returned group dict carries the
+        un-materialized device parity; :meth:`_commit_built_group` syncs on
+        it, which is what makes double-buffered commits overlap host commit
+        work for group g with the encode of group g+1.
         """
         info = ost.info
         k, m, c = info.k, info.m, info.chunk_blocks
         bb = self.zns_cfg.block_bytes
         s_count = len(raws)
-        for raw in raws:
-            commit_ts = self._now()
-            raw.ts[:] = commit_ts
-            for slot in range(raw.capacity):
-                lba = int(raw.lbas[slot])
-                if lba >= 0:
-                    buf = self._buffered.get(lba)
-                    if buf is not None and buf[0] is raw and buf[1] == slot:
-                        del self._buffered[lba]
-        data_all = np.stack([raw.blocks for raw in raws]).reshape(s_count, k, c * bb)
-        if m:
-            parity_all = self.codec.encode_batch_np(data_all).reshape(
-                s_count, m, c, bb
-            )
+        # commit timestamps: the same values s_count sequential _now() calls
+        # would produce, assigned in staging order
+        ts0 = self.ts_counter
+        self.ts_counter += s_count
+        ts_vec = np.arange(ts0 + 1, ts0 + s_count + 1, dtype=np.uint64)
+        arena = raws[0].arena
+        if arena is not None and all(r.arena is arena for r in raws):
+            slots = np.fromiter((r.slot for r in raws), np.int64, s_count)
+            target = 1 << max(0, (s_count - 1).bit_length())
+            if target != s_count:
+                slots_padded = np.concatenate(
+                    [slots, np.zeros(target - s_count, np.int64)]  # zero slot
+                )
+            else:
+                slots_padded = slots
+            packed = arena.gather_packed(slots_padded)  # (S_pad, k, lanes)
+            lbas_all = arena.lbas[slots]                # gather: fresh copies
+            gids_all = arena.gids[slots]
+        else:  # arena drained / unaligned blocks: stack + host-side pack
+            stacked = np.stack([r.blocks for r in raws]).reshape(s_count, k, c * bb)
+            padded, _ = StripeCodec._pad_batch(stacked)
+            packed = kops.pack_bytes_np(padded)
+            lbas_all = np.stack([r.lbas for r in raws])
+            gids_all = np.stack([r.meta_gids for r in raws])
+        # data payload for the drive commits: a dtype view of the same gather
+        data_all = kops.unpack_bytes_np(packed)[:s_count].reshape(s_count, k, c, bb)
+        if m and not self.scheme.mirror:
+            parity_dev = self.codec.encode_batch_async(packed)
         else:
-            parity_all = np.zeros((s_count, 0, c, bb), np.uint8)
-        lbas_all = np.stack([raw.lbas for raw in raws])          # (S, k*c)
-        ts_all = np.stack([raw.ts for raw in raws])              # (S, k*c)
-        gids_all = np.stack([raw.meta_gids for raw in raws])     # (S, k*c)
+            parity_dev = None  # mirror copies / RAID-0: no device work
+        # superseded-copy cancellation marked these slots as padding already;
+        # every still-nonnegative LBA is owned by its staging slot
+        for lba in lbas_all.ravel():
+            if lba >= 0:
+                self._buffered.pop(int(lba), None)
+        ts_all = np.broadcast_to(ts_vec[:, None], (s_count, k * c))
         seqs = np.arange(seq0, seq0 + s_count, dtype=np.int64)
         meta_mask = gids_all >= 0
         pad_mask = (lbas_all < 0) & ~meta_mask
@@ -616,19 +776,29 @@ class ZapRAIDArray:
             par_oob["stripe"] = seqs[:, None, None]
         else:
             par_oob = np.zeros((s_count, 0, c), dtype=OOB_DTYPE)
-        return [
-            {
-                "seq": int(seqs[i]),
-                "data": raws[i].blocks.reshape(k, c, bb),
-                "parity": parity_all[i],
-                "data_oob": data_oob[i],
-                "par_oob": par_oob[i],
-                "lbas": lbas_all[i].reshape(k, c),
-                "ts": ts_all[i].reshape(k, c),
-                "meta_gids": gids_all[i].reshape(k, c),
-            }
-            for i in range(s_count)
+        # Zone-Append completion order is drawn at build time so the RNG /
+        # device-plan sequence matches the synchronous commit path even when
+        # the drive commit itself is deferred one group.
+        ops_list = [
+            (s_i, d) for s_i in range(s_count) for d in range(info.n_drives)
         ]
+        if self.append_plan_fn is not None:
+            order = np.asarray(self.append_plan_fn(info, ops_list), np.int64)
+        else:
+            order = self.rng.permutation(len(ops_list)).astype(np.int64)
+        return {
+            "ost": ost,
+            "raws": raws,
+            "seqs": seqs,
+            "data_all": data_all,
+            "parity_dev": parity_dev,
+            "data_oob": data_oob,
+            "par_oob": par_oob,
+            "lbas_all": lbas_all.reshape(s_count, k, c),
+            "ts_all": np.ascontiguousarray(ts_all).reshape(s_count, k, c),
+            "gids_all": gids_all.reshape(s_count, k, c),
+            "order": order,
+        }
 
     def _role_payload(self, built: dict, role: int):
         k = built["data"].shape[0]
@@ -656,19 +826,135 @@ class ZapRAIDArray:
         self._finish_stripe_bookkeeping(ost, built, {d: off for d in range(info.n_drives)})
 
     def _commit_group(self, ost: _OpenSegment) -> None:
-        """Zone-Append group commit with globally shuffled completion order."""
+        """Zone-Append group commit with globally shuffled completion order.
+
+        On the batched datapath this builds the group, dispatches its fused
+        encode asynchronously, commits the *previous* deferred group (whose
+        encode has been running meanwhile), and -- when overlap is on and no
+        sync point forces otherwise -- leaves the new group pending for the
+        next commit/sync, i.e. double-buffering."""
         info = ost.info
-        c = info.chunk_blocks
         if not ost.group_buffer:
             return
-        if self.cfg.batched:
-            staged = self._build_stripes(ost, ost.group_buffer, info.stripes_written)
+        if not self.cfg.batched:
+            self._commit_group_legacy(ost)
+            return
+        pend = self._pending_group
+        pc = len(pend["seqs"]) if (pend is not None and pend["ost"] is ost) else 0
+        seq0 = info.stripes_written + pc
+        grp = self._build_group(ost, ost.group_buffer, seq0)
+        ost.group_buffer = []
+        end_of_segment = seq0 + len(grp["seqs"]) == info.n_stripes
+        self._sync_pending()  # overlaps with grp's in-flight encode
+        defer = (
+            self.cfg.overlap
+            and not end_of_segment
+            and self.budget.remaining is None
+            and self.append_plan_fn is None
+            and self.commit_listener is None
+        )
+        if defer:
+            self._pending_group = grp
         else:
-            staged = [
-                self._build_stripe(ost, raw, info.stripes_written + i)
-                for i, raw in enumerate(ost.group_buffer)
-            ]
-        group_idx = staged[0]["seq"] // info.group_size
+            self._commit_built_group(grp)
+
+    def _sync_pending(self) -> None:
+        """Explicit sync point: commit the deferred (double-buffered) group."""
+        if self._pending_group is not None:
+            grp = self._pending_group
+            self._pending_group = None
+            self._commit_built_group(grp)
+
+    def _commit_built_group(self, grp: dict) -> None:
+        """Materialize the group's device parity and commit it to the drives.
+
+        Normal path: one bulk Zone-Append run per drive (the per-drive issue
+        subsequence of the shuffled completion order) plus fully vectorized
+        CST/L2P/validity bookkeeping.  With a crash budget armed the scalar
+        per-command loop is kept so power loss cuts at exact block
+        granularity, like NAND."""
+        ost = grp["ost"]
+        info = ost.info
+        m, c = info.m, info.chunk_blocks
+        n = info.n_drives
+        bb = self.zns_cfg.block_bytes
+        seqs = grp["seqs"]
+        s_count = len(seqs)
+        if self.scheme.mirror:
+            parity_all = grp["data_all"]
+        elif m:
+            t0 = time.perf_counter() if self.encode_listener else 0.0
+            parity_np = self.codec.materialize(grp["parity_dev"])
+            if self.encode_listener is not None:
+                self.encode_listener(
+                    info, s_count, (time.perf_counter() - t0) * 1e6
+                )
+            parity_all = kops.unpack_bytes_np(parity_np)[:s_count].reshape(
+                s_count, m, c, bb
+            )
+        else:
+            parity_all = np.zeros((s_count, 0, c, bb), np.uint8)
+        codeword = np.concatenate([grp["data_all"], parity_all], axis=1)
+        oob_code = np.concatenate([grp["data_oob"], grp["par_oob"]], axis=1)
+        rot = seqs % n if self.scheme.rotate else np.zeros(s_count, np.int64)
+        order = grp["order"]
+        offsets = np.empty((s_count, n), dtype=np.int64)
+        if self.budget.remaining is not None:
+            crashed = None
+            for oi in order:
+                s_i, drive_idx = divmod(int(oi), n)
+                role = int((drive_idx - rot[s_i]) % n)
+                zone = info.zone_ids[drive_idx]
+                try:
+                    off = self.drives[drive_idx].zone_append_commit(
+                        zone, codeword[s_i, role], oob_code[s_i, role]
+                    )
+                except DeviceCrashed as e:
+                    crashed = e
+                    break
+                offsets[s_i, drive_idx] = off
+                self.stats.device_blocks_written += c
+                ost.meta[drive_idx, off - c : off + 0] = oob_code[s_i, role]
+            if crashed is not None:
+                for raw in grp["raws"]:
+                    raw.release()
+                raise crashed
+            for d in range(n):
+                ost.cst.record_many(
+                    d, (offsets[:, d] - info.data_start()) // c,
+                    seqs % info.group_size,
+                )
+        else:
+            for d in range(n):
+                mask = (order % n) == d
+                s_list = order[mask] // n
+                roles = (d - rot[s_list]) % n
+                payload = codeword[s_list, roles]
+                oobs = oob_code[s_list, roles]
+                zone = info.zone_ids[d]
+                offs = self.drives[d].zone_append_commit_many(zone, payload, oobs)
+                self.stats.device_blocks_written += payload.shape[0] * c
+                base = int(offs[0]) - c
+                ost.meta[d, base : base + offs.shape[0] * c] = oobs.reshape(-1)
+                offsets[s_list, d] = offs
+                ost.cst.record_many(
+                    d, (offs - info.data_start()) // c,
+                    seqs[s_list] % info.group_size,
+                )
+        info.stripes_written += s_count
+        self.stats.stripes_committed += s_count
+        self._finish_group_bookkeeping(ost, grp, offsets, codeword, parity_all)
+        for raw in grp["raws"]:
+            raw.release()
+
+    def _commit_group_legacy(self, ost: _OpenSegment) -> None:
+        """Per-stripe build + per-command commit (``batched=False``)."""
+        info = ost.info
+        c = info.chunk_blocks
+        staged = [
+            self._build_stripe(ost, raw, info.stripes_written + i)
+            for i, raw in enumerate(ost.group_buffer)
+        ]
         ops = []
         for s_i, built in enumerate(staged):
             for drive_idx in range(info.n_drives):
@@ -696,6 +982,8 @@ class ZapRAIDArray:
             self.stats.device_blocks_written += c
             ost.meta[drive_idx, off - c : off + 0] = oobs
         if crashed is not None:
+            for raw in ost.group_buffer:
+                raw.release()
             ost.group_buffer = []
             raise crashed
         # all appends of the group persisted -> record CST, L2P, ack
@@ -707,6 +995,8 @@ class ZapRAIDArray:
             info.stripes_written += 1
             self.stats.stripes_committed += 1
             self._finish_stripe_bookkeeping(ost, built, per_drive_off)
+        for raw in ost.group_buffer:
+            raw.release()
         ost.group_buffer = []
 
     def _finish_stripe_bookkeeping(
@@ -752,6 +1042,111 @@ class ZapRAIDArray:
         if self.commit_listener is not None:
             self.commit_listener(info, built, per_drive_off)
 
+    def _finish_group_bookkeeping(
+        self,
+        ost: _OpenSegment,
+        grp: dict,
+        offsets: np.ndarray,
+        codeword: np.ndarray,
+        parity_all: np.ndarray,
+    ) -> None:
+        """Vectorized ``_finish_stripe_bookkeeping`` for a whole group.
+
+        User-block L2P/validity updates collapse into one ``get_many`` /
+        ``set_many`` / fancy-index pass (user LBAs are unique within a group:
+        duplicates were cancelled into padding at staging time).  Mapping
+        blocks are rare and keep the ordered scalar body; so does the whole
+        user loop when the L2P offloads, because CLOCK eviction decisions --
+        and hence which mapping blocks hit the media -- depend on the exact
+        per-block access order the scalar path defines."""
+        info = ost.info
+        rec = self.segments[info.seg_id]
+        k, c = info.k, info.chunk_blocks
+        n = info.n_drives
+        seqs = grp["seqs"]
+        s_count = len(seqs)
+        rot = seqs % n if self.scheme.rotate else np.zeros(s_count, np.int64)
+        drive_of = (np.arange(k)[None, :] + rot[:, None]) % n          # (S, k)
+        base_off = np.take_along_axis(offsets, drive_of, axis=1)       # (S, k)
+        blk_off = base_off[:, :, None] + np.arange(c)[None, None, :]   # (S, k, c)
+        drive_f = np.broadcast_to(drive_of[:, :, None], (s_count, k, c)).ravel()
+        blk_f = blk_off.ravel()
+        pba_f = pack_pba_many(info.seg_id, drive_f, blk_f)
+        didx_f = blk_f - info.data_start()
+        lba_f = grp["lbas_all"].ravel()
+        ts_f = grp["ts_all"].ravel()
+        gid_f = grp["gids_all"].ravel()
+        for i in np.flatnonzero(gid_f >= 0):  # mapping blocks
+            gid, ts = int(gid_f[i]), int(ts_f[i])
+            if ts < self._gid_ts.get(gid, 0):
+                continue  # a newer mapping block already committed
+            self._gid_ts[gid] = ts
+            old = self.mapping_table.get(gid, int(NO_PBA))
+            if old != int(NO_PBA):
+                self._invalidate(old)
+            self.mapping_table[gid] = int(pba_f[i])
+            if self._meta_queued_ts.get(gid) == ts:
+                self._meta_staging.pop(gid, None)  # durable now
+            rec.valid[drive_f[i], didx_f[i]] = True
+            rec.valid_count += 1
+        user_idx = np.flatnonzero(lba_f >= 0)
+        if self.l2p.offload:
+            for i in user_idx:
+                lba, ts = int(lba_f[i]), int(ts_f[i])
+                if ts < int(self._lba_ts[lba]):
+                    continue  # stale at birth: a newer write already won
+                self._lba_ts[lba] = ts
+                old = self.l2p.get(lba)
+                if old != int(NO_PBA):
+                    self._invalidate(old)
+                self.l2p.set(lba, int(pba_f[i]))
+                rec.valid[drive_f[i], didx_f[i]] = True
+                rec.valid_count += 1
+        elif user_idx.size:
+            lba_u = lba_f[user_idx]
+            ok = ts_f[user_idx].astype(np.uint64) >= self._lba_ts[lba_u]
+            ui = user_idx[ok]
+            lba_u = lba_u[ok]
+            self._lba_ts[lba_u] = ts_f[ui]
+            old = self.l2p.get_many(lba_u)
+            self._invalidate_many(old)
+            self.l2p.set_many(lba_u, pba_f[ui])
+            rec.valid[drive_f[ui], didx_f[ui]] = True
+            rec.valid_count += int(ui.size)
+        if self.commit_listener is not None:
+            for s_i in range(s_count):
+                built = {
+                    "seq": int(seqs[s_i]),
+                    "data": codeword[s_i, :k],
+                    "parity": parity_all[s_i],
+                    "data_oob": grp["data_oob"][s_i],
+                    "par_oob": grp["par_oob"][s_i],
+                    "lbas": grp["lbas_all"][s_i],
+                    "ts": grp["ts_all"][s_i],
+                    "meta_gids": grp["gids_all"][s_i],
+                }
+                per_drive_off = {d: int(offsets[s_i, d]) for d in range(n)}
+                self.commit_listener(info, built, per_drive_off)
+
+    def _invalidate_many(self, pbas: np.ndarray) -> None:
+        """Vectorized ``_invalidate`` (old copies superseded by a group)."""
+        pbas = pbas[pbas != int(NO_PBA)]
+        if pbas.size == 0:
+            return
+        segs, drvs, offs = unpack_pba_many(pbas)
+        for seg_id in np.unique(segs):
+            rec = self.segments.get(int(seg_id))
+            if rec is None:
+                continue
+            sel = segs == seg_id
+            didx = offs[sel] - rec.info.data_start()
+            d = drvs[sel]
+            inb = (didx >= 0) & (didx < rec.valid.shape[1])
+            d, didx = d[inb], didx[inb]
+            cur = rec.valid[d, didx]
+            rec.valid[d, didx] = False
+            rec.valid_count -= int(cur.sum())
+
     def _invalidate(self, pba: int) -> None:
         seg_id, drive, off = unpack_pba(pba)
         rec = self.segments.get(seg_id)
@@ -766,10 +1161,11 @@ class ZapRAIDArray:
 
     def _maybe_seal(self, ost: _OpenSegment) -> None:
         info = ost.info
-        if info.stripes_written < info.n_stripes:
+        if info.stripes_written + self._pending_count(ost) < info.n_stripes:
             return
         if ost.group_buffer:
             self._commit_group(ost)
+        self._sync_pending()  # the tail group must land before the footer
         self._seal_segment(ost)
 
     def _seal_segment(self, ost: _OpenSegment) -> None:
@@ -811,6 +1207,7 @@ class ZapRAIDArray:
     # ------------------------------------------------------------------ reads
 
     def read(self, lba: int, n_blocks: int = 1) -> np.ndarray:
+        self._sync_pending()  # read-your-writes: deferred group must land
         self.stats.reads += n_blocks
         # single-block reads keep the scalar path: the gather/group machinery
         # costs more than it saves below ~2 blocks (random-read hot path)
@@ -823,14 +1220,16 @@ class ZapRAIDArray:
 
     def _read_blocks(self, lbas: np.ndarray) -> np.ndarray:
         """Vectorized multi-block read: one L2P gather, then one numpy gather
-        per (segment, drive) the blocks land on; failed drives fall back to
-        per-block degraded reads."""
+        per (segment, drive) the blocks land on; blocks on failed drives are
+        collected and reconstructed in one fused decode per surviving-role
+        set (the batched degraded-read path)."""
         out = np.zeros((lbas.shape[0], self.zns_cfg.block_bytes), dtype=np.uint8)
         pbas = self.l2p.get_many(lbas)
         mapped = np.nonzero(pbas != int(NO_PBA))[0]
         if mapped.size == 0:
             return out
         segs, drives, offs = unpack_pba_many(pbas[mapped])
+        faulted: list[tuple[int, int, np.ndarray, np.ndarray]] = []
         for key in {(int(s), int(d)) for s, d in zip(segs, drives)}:
             seg_id, drive_idx = key
             sel = (segs == seg_id) & (drives == drive_idx)
@@ -839,8 +1238,16 @@ class ZapRAIDArray:
             try:
                 out[idxs] = self.drives[drive_idx].read_blocks(zone, offs[sel])
             except DriveFailed:
-                for i, off in zip(idxs, offs[sel]):
-                    out[i] = self._degraded_read(seg_id, drive_idx, int(off))
+                faulted.append((seg_id, drive_idx, idxs, offs[sel]))
+        for seg_id, drive_idx, idxs, f_offs in faulted:
+            rec = self.segments[seg_id]
+            info = rec.info
+            c = info.chunk_blocks
+            didx = f_offs - info.data_start()
+            chunk_idxs, inv = np.unique(didx // c, return_inverse=True)
+            chunks, _ = self._reconstruct_chunks(rec, drive_idx, chunk_idxs)
+            out[idxs] = chunks[inv, didx % c]
+            self.stats.degraded_reads += int(idxs.size)
         return out
 
     def _read_block(self, lba: int) -> np.ndarray:
@@ -1124,6 +1531,9 @@ class ZapRAIDArray:
 
     def gc_once(self) -> bool:
         """Greedy GC (§4): clean the sealed segment with the most stale blocks."""
+        # deferred commits must land first: GC reads validity/L2P state that a
+        # pending group is about to update (its old copies would look live)
+        self._sync_pending()
         candidates = [
             r for r in self.segments.values()
             if r.info.state == int(SegmentState.SEALED)
@@ -1231,10 +1641,12 @@ class ZapRAIDArray:
     # -------------------------------------------------------------- drive fail
 
     def fail_drive(self, drive_idx: int) -> None:
+        self._sync_pending()  # the deferred group still owns healthy drives
         self.drives[drive_idx].fail()
 
     def rebuild_drive(self, drive_idx: int) -> None:
         """Full-drive recovery (§3.5) onto a replacement drive."""
+        self._sync_pending()
         self.drives[drive_idx].replace()
         new = self.drives[drive_idx]
         for rec in sorted(self.segments.values(), key=lambda r: r.info.seg_id):
@@ -1335,11 +1747,15 @@ class ZapRAIDArray:
 
     def arm_crash(self, blocks_from_now: int) -> None:
         """Next ``blocks_from_now`` block commits succeed; later ones crash."""
+        # a deferred group predates the arming (the synchronous path would
+        # already have committed it), so land it before the budget bites
+        self._sync_pending()
         self.budget.remaining = blocks_from_now
 
     def disarm_crash(self) -> None:
         self.budget.remaining = None
 
     def logical_utilization(self) -> float:
+        self._sync_pending()
         live = sum(r.valid_count for r in self.segments.values())
         return live / max(1, self.cfg.logical_blocks)

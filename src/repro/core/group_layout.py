@@ -44,6 +44,13 @@ class CompactStripeTable:
         assert stripe_id_in_group < max(self.group_size, 2)
         self.table[drive, chunk_idx] = stripe_id_in_group
 
+    def record_many(
+        self, drive: int, chunk_idxs: np.ndarray, stripe_ids: np.ndarray
+    ) -> None:
+        """Vectorized :meth:`record` for one drive (bulk group commit)."""
+        assert stripe_ids.size == 0 or int(stripe_ids.max()) < max(self.group_size, 2)
+        self.table[drive, np.asarray(chunk_idxs, np.int64)] = stripe_ids
+
     def stripe_id_at(self, drive: int, chunk_idx: int) -> int:
         self.entries_accessed += 1
         return int(self.table[drive, chunk_idx])

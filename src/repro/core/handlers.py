@@ -100,6 +100,7 @@ class HandlerPipeline:
             self._barriers: dict[int, float] = {}  # seg_id -> group-done time
             self._last_write_dispatch = 0.0
             array.commit_listener = self._on_stripe_commit
+            array.encode_listener = self._on_group_encode
             if array.cfg.append_order == "timed":
                 array.append_plan_fn = self._plan_group
 
@@ -229,6 +230,21 @@ class HandlerPipeline:
         self._barriers[info.seg_id] = group_done
         self.counters["segment_state"] += 1
         return order
+
+    def _on_group_encode(self, info, n_stripes: int, host_us: float) -> None:
+        """Encode-completion event from the device-resident datapath.
+
+        The fused group encode runs on the accelerator while the committer
+        prepares the drive payloads; the sync stall the committer actually
+        paid (host wall time of the materialize) is threaded into the
+        recorder -- ``notes["encode_sync_us"]`` totals the stall and
+        ``note_counts["encode_sync_us"]`` counts the groups -- so timed-mode
+        stats stay honest about codec cost.  Virtual
+        time is untouched: with the timed pipeline attached, group commits
+        are synchronous (the group barrier is already a sync point)."""
+        # one note per group: notes["encode_sync_us"] accumulates the total
+        # stall, note_counts["encode_sync_us"] counts encoded groups
+        self.recorder.note("encode_sync_us", host_us)
 
     def _on_stripe_commit(self, info, built, per_drive_off):
         """Resolve pending writes covered by a just-persisted stripe."""

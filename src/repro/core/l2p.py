@@ -50,6 +50,17 @@ def unpack_pba_many(pbas: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarra
     )
 
 
+def pack_pba_many(
+    seg_id: int, drives: np.ndarray, offsets: np.ndarray
+) -> np.ndarray:
+    """Vectorized ``pack_pba`` for one segment (group-commit bookkeeping)."""
+    return (
+        (np.int64(seg_id) << _SEG_SHIFT)
+        | (np.asarray(drives, np.int64) << _DRIVE_SHIFT)
+        | np.asarray(offsets, np.int64)
+    )
+
+
 class L2PTable:
     def __init__(
         self,
@@ -75,6 +86,10 @@ class L2PTable:
             self.resident: dict[int, np.ndarray] = {}
             self.dirty: set[int] = set()
             self.refbit = np.zeros(self.n_groups, dtype=np.uint8)
+            # resident-group bitmap mirroring ``resident.keys()``: the CLOCK
+            # sweep reads candidates from one ``flatnonzero`` instead of
+            # rebuilding a sorted Python list per eviction
+            self.resident_mask = np.zeros(self.n_groups, dtype=bool)
             self.hand = 0
         # stats
         self.misses = 0
@@ -95,6 +110,7 @@ class L2PTable:
         if entries is None:
             entries = np.full(self.epg, NO_PBA, dtype=np.int64)
         self.resident[gid] = entries
+        self.resident_mask[gid] = True
         self.refbit[gid] = 1
         # The faulting group is pinned: the caller is about to read or mutate
         # the returned array, so evicting it here would orphan that update
@@ -104,32 +120,32 @@ class L2PTable:
 
     def _maybe_evict(self, pinned: Optional[int] = None) -> None:
         while len(self.resident) > self.limit_groups:
-            # CLOCK sweep over resident groups in gid order from the hand.
-            gids = sorted(self.resident.keys())
-            n = len(gids)
-            start = 0
-            for i, g in enumerate(gids):
-                if g >= self.hand:
-                    start = i
-                    break
+            # CLOCK sweep over resident groups in gid order from the hand:
+            # one bitmap scan yields the (already sorted) candidates.
+            gids = np.flatnonzero(self.resident_mask)
+            n = int(gids.size)
+            start = int(np.searchsorted(gids, self.hand))
+            if start == n:
+                start = 0
             for step in range(2 * n + 1):
-                g = gids[(start + step) % n]
+                g = int(gids[(start + step) % n])
                 if g == pinned:
                     continue
                 if self.refbit[g]:
                     self.refbit[g] = 0
                     continue
                 self._evict(g)
-                self.hand = gids[(start + step + 1) % n]
+                self.hand = int(gids[(start + step + 1) % n])
                 break
             else:  # all referenced twice around: evict the hand's group
-                g = gids[start]
+                g = int(gids[start])
                 if g == pinned:
-                    g = gids[(start + 1) % n]
+                    g = int(gids[(start + 1) % n])
                 self._evict(g)
 
     def _evict(self, gid: int) -> None:
         entries = self.resident.pop(gid)
+        self.resident_mask[gid] = False
         self.evictions += 1
         if gid in self.dirty:
             self.dirty.discard(gid)
@@ -166,8 +182,14 @@ class L2PTable:
         out = np.empty(lbas.shape, dtype=np.int64)
         gids = lbas // self.epg
         for gid in np.unique(gids):
+            g = int(gid)
+            entries = self.resident.get(g)  # one dict probe per *group*
+            if entries is None:
+                entries = self._fault_in(g)
+            else:
+                self.refbit[g] = 1
             sel = gids == gid
-            out[sel] = self._fault_in(int(gid))[lbas[sel] % self.epg]
+            out[sel] = entries[lbas[sel] % self.epg]
         return out
 
     def set_many(self, lbas: np.ndarray, pbas: np.ndarray) -> None:
@@ -180,9 +202,15 @@ class L2PTable:
             return
         gids = lbas // self.epg
         for gid in np.unique(gids):
+            g = int(gid)
+            entries = self.resident.get(g)  # one dict probe per *group*
+            if entries is None:
+                entries = self._fault_in(g)
+            else:
+                self.refbit[g] = 1
             sel = gids == gid
-            self._fault_in(int(gid))[lbas[sel] % self.epg] = pbas[sel]
-            self.dirty.add(int(gid))
+            entries[lbas[sel] % self.epg] = pbas[sel]
+            self.dirty.add(g)
 
     def compare_and_clear(self, lba: int, pba: int) -> None:
         """Invalidate the mapping only if it still points at ``pba`` (GC races)."""
@@ -206,6 +234,7 @@ class L2PTable:
             self.flat[lo:hi] = entries[: hi - lo]
         else:
             self.resident[gid] = entries.copy()
+            self.resident_mask[gid] = True
             self.refbit[gid] = 1
             self._maybe_evict()
 
@@ -213,6 +242,7 @@ class L2PTable:
         """Recovery helper: forget a resident group (its mapping block is newer)."""
         if self.offload:
             self.resident.pop(gid, None)
+            self.resident_mask[gid] = False
             self.dirty.discard(gid)
 
     def memory_bytes(self) -> int:

@@ -61,12 +61,49 @@ def make_scheme(name: str, n_drives: int) -> RaidScheme:
 
 
 class StripeCodec:
-    """Encode/decode stripes for a scheme, via Pallas kernels or oracles."""
+    """Encode/decode stripes for a scheme, via Pallas kernels or oracles.
+
+    Two byte-level surfaces exist side by side:
+
+    * ``encode_np``/``decode_np`` and their ``_batch`` variants -- blocking
+      uint8-in/uint8-out convenience wrappers (host packing is a free dtype
+      view; one device round trip per call);
+    * ``encode_batch_async``/``decode_batch_async`` -- the device-resident
+      group datapath: take an int32-packed host buffer the caller gives up
+      (an arena gather), donate it to XLA, and return the *un-materialized*
+      device array so the dispatch overlaps host-side commit work.  The
+      caller syncs with :meth:`materialize`.
+
+    ``copy_stats`` (optional) is an object with ``h2d_copies/h2d_bytes/
+    d2h_copies/d2h_bytes`` counters (e.g. :class:`repro.core.array.Stats`)
+    bumped on every host<->device transfer the codec performs.
+    """
 
     def __init__(self, scheme: RaidScheme, *, use_pallas: bool = False, interpret: bool = True):
         self.scheme = scheme
         self.use_pallas = use_pallas
         self.interpret = interpret
+        self.copy_stats = None
+
+    # -- host<->device accounting -------------------------------------------
+
+    def _to_device(self, packed_np: np.ndarray) -> jnp.ndarray:
+        if self.copy_stats is not None:
+            self.copy_stats.h2d_copies += 1
+            self.copy_stats.h2d_bytes += packed_np.nbytes
+        # jnp.array (copy=True), NOT jnp.asarray: on the CPU backend asarray
+        # zero-copies, and donating a device buffer that aliases host memory
+        # the caller still reads (the arena gather doubles as the commit
+        # payload) would let XLA scribble over it.
+        return jnp.array(packed_np)
+
+    def materialize(self, out_dev: jnp.ndarray) -> np.ndarray:
+        """Sync point: block on the device result and bring it to the host."""
+        out = np.asarray(out_dev)
+        if self.copy_stats is not None:
+            self.copy_stats.d2h_copies += 1
+            self.copy_stats.d2h_bytes += out.nbytes
+        return out
 
     # data: (k, n_i32) int32 packed chunk payloads
     def encode(self, data_i32: jnp.ndarray) -> jnp.ndarray:
@@ -185,14 +222,16 @@ class StripeCodec:
 
     def decode_np(self, surviving: np.ndarray, surviving_roles: tuple[int, ...]) -> np.ndarray:
         """Byte-level convenience wrapper (uint8 in/out) used by recovery paths."""
-        packed = ops.pack_bytes(jnp.asarray(surviving))
+        packed = self._to_device(ops.pack_bytes_np(surviving))
         out = self.decode(packed, surviving_roles)
-        return np.asarray(ops.unpack_bytes(out))
+        return ops.unpack_bytes_np(self.materialize(out))
 
     def encode_np(self, data: np.ndarray) -> np.ndarray:
-        packed = ops.pack_bytes(jnp.asarray(data))
+        if not self.scheme.m:
+            return np.zeros((0, data.shape[1]), np.uint8)
+        packed = self._to_device(ops.pack_bytes_np(data))
         out = self.encode(packed)
-        return np.asarray(ops.unpack_bytes(out)).reshape(self.scheme.m, -1) if self.scheme.m else np.zeros((0, data.shape[1]), np.uint8)
+        return ops.unpack_bytes_np(self.materialize(out)).reshape(self.scheme.m, -1)
 
     @staticmethod
     def _pad_batch(data: np.ndarray) -> tuple[np.ndarray, int]:
@@ -217,21 +256,85 @@ class StripeCodec:
         s_count, _, n_bytes = data.shape
         if self.scheme.m == 0:
             return np.zeros((s_count, 0, n_bytes), np.uint8)
-        padded, s_count = self._pad_batch(np.ascontiguousarray(data))
-        packed = ops.pack_bytes(jnp.asarray(padded))
-        out = self.encode_batch(packed)
-        return np.asarray(ops.unpack_bytes(out)).reshape(
-            padded.shape[0], self.scheme.m, n_bytes
-        )[:s_count]
+        out_dev = self.encode_batch_async(
+            ops.pack_bytes_np(self._pad_batch(np.ascontiguousarray(data))[0])
+        )
+        return ops.unpack_bytes_np(self.materialize(out_dev))[:s_count]
 
     def decode_batch_np(
         self, surviving: np.ndarray, surviving_roles: tuple[int, ...]
     ) -> np.ndarray:
         """(S, k, n_bytes) uint8 survivors -> (S, k, n_bytes) data."""
-        padded, s_count = self._pad_batch(np.ascontiguousarray(surviving))
-        packed = ops.pack_bytes(jnp.asarray(padded))
-        out = self.decode_batch(packed, surviving_roles)
-        return np.asarray(ops.unpack_bytes(out))[:s_count]
+        s_count = surviving.shape[0]
+        out_dev = self.decode_batch_async(
+            ops.pack_bytes_np(self._pad_batch(np.ascontiguousarray(surviving))[0]),
+            surviving_roles,
+        )
+        return ops.unpack_bytes_np(self.materialize(out_dev))[:s_count]
+
+    # -- device-resident group entry points (donated buffers, async) ---------
+
+    def encode_batch_async(self, packed_np: np.ndarray) -> jnp.ndarray:
+        """Dispatch a fused group encode and return the device array.
+
+        ``packed_np`` is an int32-packed (S, k, n_i32) host buffer the caller
+        relinquishes (typically a fresh arena gather, already power-of-two
+        bucketed); it is copied to the device once and the device buffer is
+        *donated* to the kernel, so steady-state group commits reuse the same
+        allocation instead of growing a fresh one per group.  The returned
+        array is not materialized -- JAX async dispatch lets the encode run
+        while the caller commits the previous group; sync via
+        :meth:`materialize`."""
+        s = self.scheme
+        assert packed_np.ndim == 3 and packed_np.shape[1] == s.k, packed_np.shape
+        packed = self._to_device(packed_np)
+        if s.m == 0:
+            return jnp.zeros((packed.shape[0], 0, packed.shape[2]), jnp.int32)
+        if s.mirror:
+            return packed
+        with ops.quiet_donation():
+            if s.m == 1:
+                p = ops.xor_parity_batch_device(
+                    packed, use_pallas=self.use_pallas, interpret=self.interpret
+                )
+                return p[:, None, :]
+            return ops.rs_encode_batch_device(
+                packed, s.m, use_pallas=self.use_pallas, interpret=self.interpret
+            )
+
+    def decode_batch_async(
+        self, packed_np: np.ndarray, surviving_roles: tuple[int, ...]
+    ) -> jnp.ndarray:
+        """Donating, async variant of :meth:`decode_batch` (see above)."""
+        s = self.scheme
+        roles = tuple(surviving_roles)
+        if s.m == 0:
+            raise ValueError("RAID-0 cannot decode lost chunks")
+        packed = self._to_device(packed_np)
+        if s.mirror:
+            return self.decode_batch(packed, roles)
+        if len(roles) != s.k:
+            raise ValueError(f"need exactly k={s.k} surviving rows, got {len(roles)}")
+        if set(roles) == set(range(s.k)):
+            order = [roles.index(i) for i in range(s.k)]
+            return packed[:, jnp.array(order)]
+        with ops.quiet_donation():
+            if s.m == 1:
+                lost = set(range(s.k)) - set(roles)
+                lost_role = lost.pop()
+                # slice the survivor columns out *before* the donating call:
+                # the donated buffer is dead the moment the kernel takes it
+                cols = {
+                    role: packed[:, i] for i, role in enumerate(roles) if role < s.k
+                }
+                cols[lost_role] = ops.xor_parity_batch_device(
+                    packed, use_pallas=self.use_pallas, interpret=self.interpret
+                )
+                return jnp.stack([cols[i] for i in range(s.k)], axis=1)
+            return ops.rs_decode_batch_device(
+                packed, roles, s.k, s.m,
+                use_pallas=self.use_pallas, interpret=self.interpret,
+            )
 
 
 def _meta_rows(lbas: np.ndarray, ts: np.ndarray) -> np.ndarray:

@@ -203,6 +203,28 @@ class SimZnsDrive:
         self._commit_blocks(zone, blocks, oobs)
         return off
 
+    def zone_append_commit_many(
+        self, zone: int, chunks: np.ndarray, oobs: np.ndarray
+    ) -> np.ndarray:
+        """Commit a run of append commands to one zone in the given order.
+
+        ``chunks`` is (n_cmds, chunk_blocks, block_bytes) and ``oobs`` is
+        (n_cmds, chunk_blocks); command i lands at ``offsets[i]``, exactly as
+        n_cmds sequential :meth:`zone_append_commit` calls would -- but the
+        media update is two slice assignments for the whole run (the group
+        committer's per-drive hot path).  Returns the per-command offsets.
+
+        Only valid with no crash budget armed: per-block power-loss
+        granularity needs the scalar path (the caller falls back to it)."""
+        assert self.budget.remaining is None, "bulk append needs the scalar path"
+        self._check_alive()
+        self._open_zone(zone)
+        n_cmds, c, bb = chunks.shape
+        off0 = int(self.wp[zone])
+        self._commit_blocks(zone, chunks.reshape(n_cmds * c, bb),
+                            oobs.reshape(n_cmds * c))
+        return off0 + c * np.arange(n_cmds, dtype=np.int64)
+
     # -- reads --------------------------------------------------------------
 
     def read(self, zone: int, offset: int, n_blocks: int) -> np.ndarray:

@@ -12,7 +12,9 @@ lanes the kernels consume.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -175,6 +177,108 @@ def rs_decode_batch(
     return rs_matmul_batch(
         dec, surviving_i32, use_pallas=use_pallas, interpret=interpret
     )
+
+
+# -------------------------------------------- device-resident (donated) ops
+#
+# Entry points for the zero-copy group datapath: the caller hands over a
+# packed int32 device buffer it will never touch again (the staging arena's
+# per-group gather), so the input buffer is donated to XLA and the dispatch
+# returns immediately (JAX async dispatch).  The group committer materializes
+# the result with one np.asarray at the commit sync point.
+#
+# Donation is best-effort: when the output shape differs from the input's
+# (encode maps k rows to m), XLA reports the buffer as unusable at compile
+# time.  That is expected -- the donation still pays off on the square decode
+# matmuls -- so the advisory compile-time warning is silenced at the call
+# sites (a module-level filter would not survive pytest's warning capture).
+
+@contextlib.contextmanager
+def quiet_donation():
+    """Context silencing XLA's advisory unusable-donation compile warning."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable",
+            category=UserWarning,
+        )
+        yield
+
+
+@functools.partial(
+    jax.jit, static_argnames=("use_pallas", "interpret"), donate_argnums=(0,)
+)
+def xor_parity_batch_device(
+    chunks_i32: jax.Array, *, use_pallas: bool = True, interpret: bool = True
+) -> jax.Array:
+    """Donating ``xor_parity_batch``: (S, k, n) int32 -> (S, n) int32."""
+    if use_pallas:
+        padded, n = _pad_lanes(chunks_i32)
+        return parity_xor_batch(padded, interpret=interpret)[:, :n]
+    return ref.parity_xor_batch_ref(chunks_i32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("use_pallas", "interpret"), donate_argnums=(1,)
+)
+def rs_matmul_batch_device(
+    coeff_i32: jax.Array,
+    chunks_i32: jax.Array,
+    *,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Donating ``rs_matmul_batch``: coeff kept, stripe buffer donated."""
+    if use_pallas:
+        padded, n = _pad_lanes(chunks_i32)
+        return gf256_matmul_batch(coeff_i32, padded, interpret=interpret)[:, :, :n]
+    return ref.gf256_matmul_batch_ref(coeff_i32, chunks_i32)
+
+
+def rs_encode_batch_device(
+    chunks_i32: jax.Array,
+    m: int,
+    *,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Donating ``rs_encode_batch`` (cached coeff matrix, donated stripes)."""
+    k = chunks_i32.shape[1]
+    coeff = rs_parity_coeff(k, m)
+    return rs_matmul_batch_device(
+        coeff, chunks_i32, use_pallas=use_pallas, interpret=interpret
+    )
+
+
+def rs_decode_batch_device(
+    surviving_i32: jax.Array,
+    surviving_rows: tuple[int, ...],
+    k: int,
+    m: int,
+    *,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Donating ``rs_decode_batch`` (cached decode matrix, donated survivors)."""
+    dec = rs_decode_coeff(k, m, tuple(surviving_rows))
+    return rs_matmul_batch_device(
+        dec, surviving_i32, use_pallas=use_pallas, interpret=interpret
+    )
+
+
+def pack_bytes_np(data_u8: np.ndarray) -> np.ndarray:
+    """Host-side ``pack_bytes``: a free dtype view, no device dispatch.
+
+    numpy's in-memory byte order equals ``jax.lax.bitcast_convert_type``'s
+    lane packing, so viewing a C-contiguous uint8 buffer as int32 produces
+    bit-identical lanes to :func:`pack_bytes` without entering the device."""
+    assert data_u8.shape[-1] % 4 == 0
+    data_u8 = np.ascontiguousarray(data_u8)
+    return data_u8.view(np.int32)
+
+
+def unpack_bytes_np(data_i32: np.ndarray) -> np.ndarray:
+    """Host-side ``unpack_bytes``: a free dtype view of an int32 buffer."""
+    return np.ascontiguousarray(data_i32).view(np.uint8)
 
 
 def ssd_chunk_scan(

@@ -192,6 +192,21 @@ class TimedDrive(SimZnsDrive):
         self.chunk_done[(zone, off)] = done
         return off
 
+    def zone_append_commit_many(self, zone: int, chunks, oobs) -> np.ndarray:
+        offs = super().zone_append_commit_many(zone, chunks, oobs)
+        planned = self._planned.get(zone)
+        c = chunks.shape[1]
+        for off in offs:
+            # the per-zone planned queue is in completion-time order, which
+            # is exactly the per-zone issue order of the group committer
+            if planned:
+                done = planned.popleft()
+                self.engine.touch_io(done)
+            else:
+                done = self.book_append(zone, c, self.engine.now)
+            self.chunk_done[(zone, int(off))] = done
+        return offs
+
     def read(self, zone: int, offset: int, n_blocks: int):
         out = super().read(zone, offset, n_blocks)
         self.book_read(n_blocks, self.engine.now)
