@@ -16,11 +16,11 @@ bench:
 	$(PY) -m benchmarks.run
 
 # Cheap subset with small shapes for CI time budgets; rewrites the committed
-# BENCH_PR4.json baseline (the quick set carries the perf acceptance figures).
+# BENCH_PR5.json baseline (the quick set carries the perf acceptance figures).
 bench-quick:
 	$(PY) -m benchmarks.run --quick
 
 # CI regression gate: rerun the quick set, fail on >25% wall-clock regression
 # against the committed baseline (writes no JSON).
 bench-check:
-	$(PY) -m benchmarks.run --check BENCH_PR4.json
+	$(PY) -m benchmarks.run --check BENCH_PR5.json

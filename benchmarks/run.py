@@ -13,9 +13,9 @@ each benchmark name to its measured ``us_per_call`` and ``derived`` figure,
 so the perf trajectory can be tracked across PRs.  Each command maps to its
 own file so no sweep clobbers another's baseline: ``--quick`` (small shapes,
 cheap subset, carries the perf acceptance figures) writes the committed
-``BENCH_PR4.json``; full runs write ``BENCH_FULL.json``; ``--only`` sweeps
+``BENCH_PR5.json``; full runs write ``BENCH_FULL.json``; ``--only`` sweeps
 skip the JSON unless ``--json PATH`` is given explicitly.  ``--check
-BENCH_PR4.json`` is the CI regression gate: it reruns the quick set and
+BENCH_PR5.json`` is the CI regression gate: it reruns the quick set and
 fails on a >25% wall-clock regression against the committed baseline.
 
 Timed scenarios (``exp10/trace_timed_*``, ``qos/*``) run on the
@@ -511,6 +511,150 @@ def bench_kernels_batched():
     emit(f"kernels/rs_encode_batch_S{s_count}", us_b, f"{us_l / us_b:.1f}x_vs_loop")
 
 
+# ------------------------------------------- GC / recovery pipelines (PR 5)
+
+def _aged_shape(n_zones, zone_cap, bb=256, k=3):
+    """(logical, n_writes): sequential-wraparound churn sized so the oldest
+    sealed segment ends ~50% live (GC genuinely moves blocks) while the open
+    segment keeps a restage-sized slack (no zone exhaustion, GC disabled)."""
+    from repro.core.segment import solve_stripes_per_segment
+
+    s, _ = solve_stripes_per_segment(zone_cap, 1, bb)
+    seg_cap = k * s
+    cap = n_zones * seg_cap
+    n_writes = int(cap - 0.55 * seg_cap)
+    logical = int(n_writes - 0.5 * seg_cap)
+    return logical, n_writes
+
+
+def _aged_array(batched, *, n_zones, zone_cap, logical, n_writes, bb=256,
+                seed=31, gc_low=0):
+    """Sequential-wraparound churn leaves the oldest sealed segments
+    partially live, so a GC pass genuinely moves blocks."""
+    from repro.core.array import ZapRaidConfig, ZapRAIDArray
+    from repro.core.zns import ZnsConfig
+
+    cfg = ZapRaidConfig(scheme="raid5", n_drives=4, group_size=64,
+                        chunk_blocks=1, logical_blocks=logical,
+                        gc_free_segments_low=gc_low, batched=batched)
+    zns = ZnsConfig(n_zones=n_zones, zone_cap_blocks=zone_cap, block_bytes=bb)
+    arr = ZapRAIDArray(cfg, zns)
+    rng = np.random.default_rng(seed)
+    run = 24  # multi-block writes keep construction cheap in both modes
+    i = 0
+    while i < n_writes:
+        lba = i % logical
+        n = min(run, logical - lba, n_writes - i)
+        arr.write(lba, rng.integers(0, 256, (n, bb), dtype=np.uint8))
+        i += n
+    arr.flush()
+    return arr, cfg, zns
+
+
+def bench_gc_pipeline():
+    """GC throughput: the vectorized collection/restage pipeline (one gather
+    + OOB read per drive, mask liveness, bulk arena restage) vs the scalar
+    per-block baseline, plus foreground write p99 under GC pressure with the
+    rate-limited background-GC actor on the timed engine."""
+    zone_cap = 448 if QUICK else 576
+    logical, n_writes = _aged_shape(6, zone_cap)
+
+    def gc_pass(batched):
+        best = float("inf")
+        moved = 0
+        for _ in range(3):  # iteration 1 warms the XLA cache; min() is warm
+            arr, _, _ = _aged_array(batched, n_zones=6, zone_cap=zone_cap,
+                                    logical=logical, n_writes=n_writes)
+            before = arr.stats.gc_blocks_moved
+            t0 = time.perf_counter()
+            arr.gc_once()
+            best = min(best, time.perf_counter() - t0)
+            moved = arr.stats.gc_blocks_moved - before
+        return best * 1e6, moved
+
+    us_b, moved_b = gc_pass(True)
+    us_s, moved_s = gc_pass(False)
+    assert moved_b == moved_s and moved_b > 0, (moved_b, moved_s)
+    emit("gc/batched_once", us_b, f"{moved_b}blocks_moved")
+    emit("gc/scalar_once", us_s, f"{moved_s}blocks_moved")
+    emit("gc/speedup", 0.0, f"{us_s / us_b:.1f}x_batched_vs_scalar")
+
+    # timed mode: foreground write p99 with inline GC bursts vs the paced
+    # proactive background-GC actor (same load, same device model)
+    from repro.core.array import ZapRaidConfig
+    from repro.core.handlers import HandlerPipeline
+    from repro.core.zns import ZnsConfig
+    from repro.sim import TenantSpec, multi_tenant
+
+    cfg = ZapRaidConfig(scheme="raid5", n_drives=4, group_size=8,
+                        chunk_blocks=1, logical_blocks=360,
+                        gc_free_segments_low=1)
+    zns = ZnsConfig(n_zones=7, zone_cap_blocks=64, block_bytes=256)
+
+    def make_pipe():
+        rng = np.random.default_rng(11)
+        pipe = HandlerPipeline.build_timed(cfg, zns, seed=11)
+        pipe.precondition(
+            (i % 360, rng.integers(0, 256, (1, 256), dtype=np.uint8))
+            for i in range(900)
+        )
+        return pipe
+
+    # enough write churn that GC pressure recurs inside the measured window
+    load = multi_tenant([
+        TenantSpec(name="writer", kind="seq", n_ops=500, rate_iops=50_000,
+                   seed=41),
+        TenantSpec(name="reader", kind="uniform", n_ops=300,
+                   rate_iops=20_000, read_frac=1.0, seed=42),
+    ], logical_blocks=360)
+
+    inline = make_pipe().replay(load)
+    pipe = make_pipe()
+    pipe.schedule_gc(at=5.0, interval_us=300.0, n_ticks=200)
+    actor = pipe.replay(load)
+    p_i = inline.percentiles(op="W")["p99"]
+    p_a = actor.percentiles(op="W")["p99"]
+    emit("gc/p99_inline_bursts", p_i, "write_p99_us_sim")
+    emit("gc/p99_under_paced_gc", p_a,
+         f"{p_i / max(p_a, 1e-9):.2f}x_better_gc_busy="
+         f"{actor.notes.get('gc_device_us', 0.0):.0f}us")
+
+
+def bench_recovery_pipeline():
+    """Crash-recovery scan time: batched header gather + vectorized OOB
+    scan/harvest/install vs the per-chunk/per-block scalar scanner, on the
+    same media image (a mix of sealed and open segments)."""
+    import dataclasses as _dc
+
+    from repro.core.recovery import recover_array
+
+    zone_cap = 512 if QUICK else 640
+    n_zones = 8
+    # _aged_shape stops the churn mid-segment: the open-OOB-scan path runs
+    logical, n_writes = _aged_shape(n_zones, zone_cap)
+
+    def recover(batched):
+        best = float("inf")
+        blocks = 0
+        for _ in range(2):
+            arr, cfg, zns = _aged_array(True, n_zones=n_zones,
+                                        zone_cap=zone_cap, logical=logical,
+                                        n_writes=n_writes)
+            rcfg = _dc.replace(cfg, batched=batched)
+            t0 = time.perf_counter()
+            arr2 = recover_array(arr.drives, rcfg, zns)
+            best = min(best, time.perf_counter() - t0)
+            blocks = arr2.stats.recovery_blocks_read
+        return best * 1e6, blocks
+
+    us_b, blocks_b = recover(True)
+    us_s, blocks_s = recover(False)
+    assert blocks_b == blocks_s, (blocks_b, blocks_s)
+    emit("recovery/batched", us_b, f"{blocks_b}blocks_read")
+    emit("recovery/scalar", us_s, f"{blocks_s}blocks_read")
+    emit("recovery/speedup", 0.0, f"{us_s / us_b:.1f}x_batched_vs_scalar")
+
+
 # ------------------------------------------------------------- kernels
 
 def bench_kernels():
@@ -585,15 +729,16 @@ ALL = [
     bench_zns_primitives, bench_write, bench_reads, bench_group_size,
     bench_raid_schemes, bench_recovery, bench_hybrid, bench_gc,
     bench_l2p_offload, bench_trace, bench_latency_qos, bench_e2e_write,
-    bench_read_batched, bench_kernels_batched, bench_kernels,
-    bench_checkpoint, bench_straggler,
+    bench_read_batched, bench_gc_pipeline, bench_recovery_pipeline,
+    bench_kernels_batched, bench_kernels, bench_checkpoint, bench_straggler,
 ]
 
 # --quick runs the cheap subset (each well under a minute on CPU)
 QUICK_SET = [
     bench_zns_primitives, bench_group_size, bench_raid_schemes,
     bench_trace, bench_latency_qos, bench_e2e_write, bench_read_batched,
-    bench_kernels_batched, bench_straggler,
+    bench_gc_pipeline, bench_recovery_pipeline, bench_kernels_batched,
+    bench_straggler,
 ]
 
 
@@ -619,6 +764,7 @@ def write_json(path: str) -> None:
 # and are far too noisy (2x run-to-run) to gate CI on.
 CHECK_PREFIXES = (
     "e2e/seq_write_batched", "read/healthy_batched", "read/degraded_batched",
+    "gc/batched_once", "recovery/batched",
 )
 CHECK_SLACK = 1.25   # fail when us_per_call grows >25% over the baseline
 CHECK_MIN_US = 5.0   # skip sub-5us rows: timer/scheduler noise swamps them
@@ -687,7 +833,7 @@ def main() -> None:
                     help="small shapes / cheap subset for CI time budgets")
     ap.add_argument("--json", default=None,
                     help="machine-readable output path ('' to disable). "
-                         "Defaults: --quick -> BENCH_PR4.json (the committed "
+                         "Defaults: --quick -> BENCH_PR5.json (the committed "
                          "baseline: the quick set carries the perf acceptance "
                          "figures), full -> BENCH_FULL.json, "
                          "--only -> disabled; each command maps to one file "
@@ -706,7 +852,7 @@ def main() -> None:
         if args.only:
             json_path = ""
         else:
-            json_path = "BENCH_PR4.json" if args.quick else "BENCH_FULL.json"
+            json_path = "BENCH_PR5.json" if args.quick else "BENCH_FULL.json"
     print("name,us_per_call,derived")
     for fn in (QUICK_SET if QUICK else ALL):
         if args.only and args.only not in fn.__name__:

@@ -374,6 +374,11 @@ class ZapRAIDArray:
         # timestamp-guarded.
         self._lba_ts = np.zeros(cfg.logical_blocks, dtype=np.uint64)
         self._gid_ts: dict[int, int] = {}
+        # (seg_id, drive_idx) pairs whose zone is awaiting a paced rebuild:
+        # the drive has been replaced (healthy but empty there), so reads of
+        # those zones must route through reconstruction until the rebuild
+        # actor reaches them.  Empty outside a paced rebuild.
+        self._rebuild_pending: set[tuple[int, int]] = set()
 
         if not _recovering:
             self._open_initial_segments()
@@ -530,11 +535,18 @@ class ZapRAIDArray:
             self._dispatch_stripe(seg_class)
 
     def _append_blocks(
-        self, seg_class: int, lbas: np.ndarray, blocks: np.ndarray, ts: int
+        self,
+        seg_class: int,
+        lbas: np.ndarray,
+        blocks: np.ndarray,
+        ts: int,
+        meta_gids: Optional[np.ndarray] = None,
     ) -> None:
-        """Bulk ``_append_block``: stage a run of user blocks, dispatching each
+        """Bulk ``_append_block``: stage a run of blocks, dispatching each
         stripe as it fills.  Payload copies are vectorized slice assignments;
         only the per-LBA buffered-write bookkeeping stays scalar (dict ops).
+        Mapping blocks ride the same path (``lbas`` entry -1 with the group
+        id in ``meta_gids``); they never enter the buffered-write map.
 
         Semantically identical to calling ``_append_block`` per block in
         order (including superseding still-buffered copies of the same LBA).
@@ -548,11 +560,16 @@ class ZapRAIDArray:
                 self._in_flight[seg_class] = stripe
             take = min(stripe.capacity - stripe.fill, n - i)
             base = stripe.fill
-            stripe.add_many(lbas[i : i + take], blocks[i : i + take], ts)
+            stripe.add_many(
+                lbas[i : i + take], blocks[i : i + take], ts,
+                None if meta_gids is None else meta_gids[i : i + take],
+            )
             # bookkeeping after the bulk copy so a duplicate LBA later in this
             # same slice correctly cancels the slot staged earlier in it
             for j in range(i, i + take):
                 lba = int(lbas[j])
+                if lba < 0:
+                    continue  # mapping block / padding
                 buf = self._buffered.pop(lba, None)
                 if buf is not None:
                     old_stripe, slot = buf
@@ -896,7 +913,7 @@ class ZapRAIDArray:
             parity_all = np.zeros((s_count, 0, c, bb), np.uint8)
         codeword = np.concatenate([grp["data_all"], parity_all], axis=1)
         oob_code = np.concatenate([grp["data_oob"], grp["par_oob"]], axis=1)
-        rot = seqs % n if self.scheme.rotate else np.zeros(s_count, np.int64)
+        rot = self.scheme.rotation_many(seqs)
         order = grp["order"]
         offsets = np.empty((s_count, n), dtype=np.int64)
         if self.budget.remaining is not None:
@@ -1065,7 +1082,7 @@ class ZapRAIDArray:
         n = info.n_drives
         seqs = grp["seqs"]
         s_count = len(seqs)
-        rot = seqs % n if self.scheme.rotate else np.zeros(s_count, np.int64)
+        rot = self.scheme.rotation_many(seqs)
         drive_of = (np.arange(k)[None, :] + rot[:, None]) % n          # (S, k)
         base_off = np.take_along_axis(offsets, drive_of, axis=1)       # (S, k)
         blk_off = base_off[:, :, None] + np.arange(c)[None, None, :]   # (S, k, c)
@@ -1235,6 +1252,9 @@ class ZapRAIDArray:
             sel = (segs == seg_id) & (drives == drive_idx)
             idxs = mapped[sel]
             zone = self.segments[seg_id].info.zone_ids[drive_idx]
+            if (seg_id, drive_idx) in self._rebuild_pending:
+                faulted.append((seg_id, drive_idx, idxs, offs[sel]))
+                continue
             try:
                 out[idxs] = self.drives[drive_idx].read_blocks(zone, offs[sel])
             except DriveFailed:
@@ -1258,6 +1278,8 @@ class ZapRAIDArray:
 
     def _read_pba(self, pba: int) -> np.ndarray:
         seg_id, drive_idx, off = unpack_pba(pba)
+        if (seg_id, drive_idx) in self._rebuild_pending:
+            return self._degraded_read(seg_id, drive_idx, off)
         try:
             return self.drives[drive_idx].read(
                 self.segments[seg_id].info.zone_ids[drive_idx], off, 1
@@ -1331,7 +1353,11 @@ class ZapRAIDArray:
             seq = group_idx * info.group_size + sid
             members = {}
             for d in range(info.n_drives):
-                if d == failed_drive or self.drives[d].failed:
+                if (
+                    d == failed_drive
+                    or self.drives[d].failed
+                    or (info.seg_id, d) in self._rebuild_pending
+                ):
                     continue
                 hit = cst.find_in_group(d, group_idx, sid)
                 if hit is not None:
@@ -1342,7 +1368,9 @@ class ZapRAIDArray:
             members = {
                 d: chunk_idx
                 for d in range(info.n_drives)
-                if d != failed_drive and not self.drives[d].failed
+                if d != failed_drive
+                and not self.drives[d].failed
+                and (info.seg_id, d) not in self._rebuild_pending
             }
         return seq, members
 
@@ -1529,47 +1557,102 @@ class ZapRAIDArray:
             if not self.gc_once():
                 break
 
-    def gc_once(self) -> bool:
-        """Greedy GC (§4): clean the sealed segment with the most stale blocks."""
-        # deferred commits must land first: GC reads validity/L2P state that a
-        # pending group is about to update (its old copies would look live)
-        self._sync_pending()
-        candidates = [
+    def _gc_select_victim(self) -> Optional[_SegmentRecord]:
+        """Greedy cost-benefit victim scoring (§4), vectorized across all
+        sealed segments: ``score = (1 - u) / (1 + u) * age`` with ``u`` the
+        valid fraction -- the classic LFS cost-benefit policy instead of a
+        plain min-valid scan.  Shared by the scalar and batched datapaths so
+        both collect the same victim sequence (bit-identity)."""
+        recs = [
             r for r in self.segments.values()
             if r.info.state == int(SegmentState.SEALED)
         ]
-        if not candidates:
-            return False
-        rec = min(candidates, key=lambda r: r.valid_count)
-        if rec.valid_count >= rec.data_capacity():
-            return False  # nothing stale anywhere
-        self.stats.gc_runs += 1
+        if not recs:
+            return None
+        n = len(recs)
+        valid = np.fromiter((r.valid_count for r in recs), np.float64, n)
+        cap = np.fromiter((r.data_capacity() for r in recs), np.float64, n)
+        u = valid / np.maximum(cap, 1.0)
+        age = np.maximum(
+            self.ts_counter
+            - np.fromiter((r.info.create_ts for r in recs), np.float64, n),
+            1.0,
+        )
+        score = np.where(u < 1.0, (1.0 - u) / (1.0 + u) * age, -np.inf)
+        best = int(np.argmax(score))
+        if not np.isfinite(score[best]):
+            return None  # every sealed segment is fully live
+        return recs[best]
+
+    def _gc_collect_batched(
+        self, rec: _SegmentRecord
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Gather the victim's live blocks: one payload gather + one OOB
+        gather per drive, liveness split with numpy masks (no per-block
+        loops, no ``(lba, block)`` tuple lists).  A failed drive routes
+        through the fused whole-chunk reconstruction instead of per-block
+        degraded reads.  Returns ``(user_lbas, user_blocks, meta_gids,
+        meta_blocks)`` in scalar collection order (drive-major, ascending
+        data index)."""
         info = rec.info
         c = info.chunk_blocks
         bb = self.zns_cfg.block_bytes
-        # collect valid blocks (LBAs from OOB / footer metadata)
-        moves: list[tuple[int, np.ndarray]] = []
-        meta_moves: list[tuple[int, np.ndarray]] = []
+        lba_parts: list[np.ndarray] = []
+        blk_parts: list[np.ndarray] = []
         for drive_idx in range(info.n_drives):
-            zone = info.zone_ids[drive_idx]
-            didxs = np.nonzero(rec.valid[drive_idx])[0]
+            didxs = np.flatnonzero(rec.valid[drive_idx])
             if didxs.size == 0:
                 continue
-            if self.cfg.batched and not self.drives[drive_idx].failed:
-                # one gather read per drive for payloads and OOB alike
+            zone = info.zone_ids[drive_idx]
+            if (
+                self.drives[drive_idx].failed
+                or (info.seg_id, drive_idx) in self._rebuild_pending
+            ):
+                chunk_idxs, inv = np.unique(didxs // c, return_inverse=True)
+                chunks, oob_all = self._reconstruct_chunks(rec, drive_idx, chunk_idxs)
+                blocks = chunks[inv, didxs % c]
+                lba_parts.append(oob_all["lba"][inv, didxs % c].astype(np.uint64))
+                self.stats.degraded_reads += int(didxs.size)
+            else:
                 offs = info.data_start() + didxs
-                blocks = self.drives[drive_idx].read_blocks(zone, offs).copy()
+                # read_blocks gathers via advanced indexing: already a fresh
+                # array, no defensive copy needed
+                blocks = self.drives[drive_idx].read_blocks(zone, offs)
                 oob_arr = self.drives[drive_idx].read_oob_blocks(zone, offs)
-                lba_fields = oob_arr["lba"].astype(np.uint64)
-                live = lba_fields != INVALID_LBA
-                is_meta = (lba_fields & np.uint64(1)).astype(bool)
-                for i in np.nonzero(live)[0]:
-                    tgt = meta_moves if is_meta[i] else moves
-                    tgt.append((int(lba_fields[i]) >> 1, blocks[i]))
-                continue
-            for didx in didxs:
+                lba_parts.append(oob_arr["lba"].astype(np.uint64))
+            blk_parts.append(blocks)
+        if not lba_parts:
+            empty = np.zeros(0, np.int64)
+            none = np.zeros((0, bb), np.uint8)
+            return empty, none, empty, none
+        lba_fields = np.concatenate(lba_parts)
+        blocks = blk_parts[0] if len(blk_parts) == 1 else np.concatenate(blk_parts)
+        live = lba_fields != INVALID_LBA
+        is_meta = ((lba_fields & np.uint64(1)) != 0) & live
+        user = live & ~is_meta
+        keys = (lba_fields >> np.uint64(1)).astype(np.int64)
+        return keys[user], blocks[user], keys[is_meta], blocks[is_meta]
+
+    def _gc_collect_scalar(
+        self, rec: _SegmentRecord
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Per-block collection baseline (``batched=False``): one read + OOB
+        read per live block, per-block degraded reads on a failed drive."""
+        info = rec.info
+        c = info.chunk_blocks
+        bb = self.zns_cfg.block_bytes
+        u_lbas: list[int] = []
+        u_blocks: list[np.ndarray] = []
+        m_gids: list[int] = []
+        m_blocks: list[np.ndarray] = []
+        for drive_idx in range(info.n_drives):
+            zone = info.zone_ids[drive_idx]
+            pending = (info.seg_id, drive_idx) in self._rebuild_pending
+            for didx in np.flatnonzero(rec.valid[drive_idx]):
                 off = info.data_start() + int(didx)
                 try:
+                    if pending:
+                        raise DriveFailed("zone awaiting paced rebuild")
                     block = self.drives[drive_idx].read(zone, off, 1)[0].copy()
                     oob = self.drives[drive_idx].read_oob(zone, off, 1)[0]
                 except DriveFailed:
@@ -1581,60 +1664,107 @@ class ZapRAIDArray:
                 if lba_field == int(INVALID_LBA):
                     continue
                 if lba_field & 1:
-                    meta_moves.append((lba_field >> 1, block))
+                    m_gids.append(lba_field >> 1)
+                    m_blocks.append(block)
                 else:
-                    moves.append((lba_field >> 1, block))
+                    u_lbas.append(lba_field >> 1)
+                    u_blocks.append(block)
+
+        def pack(lbas: list[int], blks: list[np.ndarray]):
+            if not lbas:
+                return np.zeros(0, np.int64), np.zeros((0, bb), np.uint8)
+            return np.array(lbas, np.int64), np.stack(blks)
+
+        ul, ub = pack(u_lbas, u_blocks)
+        mg, mb = pack(m_gids, m_blocks)
+        return ul, ub, mg, mb
+
+    def gc_once(self) -> bool:
+        """Greedy GC (§4): collect the best cost-benefit victim's live blocks
+        and restage them through the normal write path, then reclaim the
+        victim's zones.  On the batched datapath collection is one gather +
+        OOB read per drive, liveness/eligibility are numpy masks over
+        ``l2p.get_many``, and the survivors bulk-stage straight into the
+        int32-packed arenas (the donated fused re-encode); mapping blocks
+        batch the same way.  The scalar path stays as the bit-identical
+        per-block baseline."""
+        # deferred commits must land first: GC reads validity/L2P state that a
+        # pending group is about to update (its old copies would look live)
+        self._sync_pending()
+        rec = self._gc_select_victim()
+        if rec is None:
+            return False
+        self.stats.gc_runs += 1
+        info = rec.info
+        if self.cfg.batched:
+            u_lbas, u_blocks, m_gids, m_blocks = self._gc_collect_batched(rec)
+        else:
+            u_lbas, u_blocks, m_gids, m_blocks = self._gc_collect_scalar(rec)
         # rewrites go to a large-chunk segment when hybrid (§3.3)
         target_class = (
             int(SegmentClass.LARGE)
             if (self.cfg.hybrid and self.large_ids)
             else int(SegmentClass.SMALL)
         )
-        if self.cfg.batched:
+        if self.cfg.batched and not self.l2p.offload:
             # GC'd LBAs are unique (one live copy each), so eligibility can be
             # decided up front and the survivors staged in one bulk append.
-            if moves:
-                mv_lbas = np.array([l for l, _ in moves], dtype=np.int64)
-                pbas = self.l2p.get_many(mv_lbas)
+            if u_lbas.size:
+                pbas = self.l2p.get_many(u_lbas)
                 segs, _, _ = unpack_pba_many(pbas)
-                ok = (
-                    (pbas != int(NO_PBA))
-                    & (segs == info.seg_id)
-                    & np.array([l not in self._buffered for l, _ in moves])
+                buffered = np.fromiter(
+                    (int(l) in self._buffered for l in u_lbas), bool, u_lbas.size
                 )
-                sel = np.nonzero(ok)[0]
+                sel = np.flatnonzero(
+                    (pbas != int(NO_PBA)) & (segs == info.seg_id) & ~buffered
+                )
                 if sel.size:
-                    self._append_blocks(
-                        target_class,
-                        mv_lbas[sel],
-                        np.stack([moves[i][1] for i in sel]),
-                        0,
-                    )
+                    self._append_blocks(target_class, u_lbas[sel], u_blocks[sel], 0)
                     self.stats.gc_blocks_moved += int(sel.size)
         else:
-            for lba, block in moves:
+            # scalar restage -- also the L2P-offload path, where CLOCK
+            # eviction decisions depend on the exact per-block access order
+            for i in range(u_lbas.size):
+                lba = int(u_lbas[i])
                 if lba in self._buffered:
                     continue  # a newer user write is in flight; old copy is dead
-                if self.l2p.get(lba) == int(NO_PBA):
-                    continue
-                seg_id, d, off = unpack_pba(self.l2p.get(lba))
-                if seg_id != info.seg_id:
+                pba = self.l2p.get(lba)
+                if pba == int(NO_PBA) or unpack_pba(pba)[0] != info.seg_id:
                     continue  # stale by now
-                ts = self._now()
-                self._append_block(target_class, lba, block, ts)
+                self._append_block(target_class, lba, u_blocks[i], 0)
                 self.stats.gc_blocks_moved += 1
-        for gid, block in meta_moves:
-            pba = self.mapping_table.get(gid)
-            if pba is None or unpack_pba(pba)[0] != info.seg_id:
-                continue
-            ts = self._now()
-            self._append_block(target_class, -1, block, ts, meta_gid=gid)
-            self.stats.gc_blocks_moved += 1
+        if self.cfg.batched and m_gids.size:
+            # mapping blocks batch regardless of L2P offload: the mapping
+            # table is a plain dict (no CLOCK), so upfront eligibility and
+            # bulk staging are order-equivalent to the scalar loop
+            mt = np.fromiter(
+                (self.mapping_table.get(int(g), int(NO_PBA)) for g in m_gids),
+                np.int64, m_gids.size,
+            )
+            msegs, _, _ = unpack_pba_many(mt)
+            msel = np.flatnonzero((mt != int(NO_PBA)) & (msegs == info.seg_id))
+            if msel.size:
+                self._append_blocks(
+                    target_class,
+                    np.full(msel.size, -1, np.int64),
+                    m_blocks[msel], 0,
+                    meta_gids=m_gids[msel],
+                )
+                self.stats.gc_blocks_moved += int(msel.size)
+        elif m_gids.size:
+            for i in range(m_gids.size):
+                gid = int(m_gids[i])
+                pba = self.mapping_table.get(gid)
+                if pba is None or unpack_pba(pba)[0] != info.seg_id:
+                    continue
+                self._append_block(target_class, -1, m_blocks[i], 0, meta_gid=gid)
+                self.stats.gc_blocks_moved += 1
         self.flush()
         # release the old segment's zones
         for drive_idx in range(info.n_drives):
             self.drives[drive_idx].reset_zone(info.zone_ids[drive_idx])
             self.free_zones[drive_idx].append(info.zone_ids[drive_idx])
+            self._rebuild_pending.discard((info.seg_id, drive_idx))
         del self.segments[info.seg_id]
         return True
 
@@ -1648,53 +1778,86 @@ class ZapRAIDArray:
         """Full-drive recovery (§3.5) onto a replacement drive."""
         self._sync_pending()
         self.drives[drive_idx].replace()
-        new = self.drives[drive_idx]
+        scaffold: dict[int, tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
         for rec in sorted(self.segments.values(), key=lambda r: r.info.seg_id):
-            info = rec.info
-            zone = info.zone_ids[drive_idx]
-            c = info.chunk_blocks
+            self._rebuild_segment(rec, drive_idx, scaffold)
+
+    def _rebuild_scaffold(
+        self, scaffold: dict, chunk_blocks: int
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Header/OOB/metadata scratch buffers, allocated once per chunk size
+        and reused across every rebuilt segment (not per segment)."""
+        tmpl = scaffold.get(chunk_blocks)
+        if tmpl is None:
+            c = chunk_blocks
             bb = self.zns_cfg.block_bytes
-            # how far was this zone written? mirror a surviving zone's shape:
-            # sealed => full layout; open => per-CST/our records
             hdr_chunk = np.zeros((c, bb), np.uint8)
-            hdr_chunk[0] = pack_header(info, bb)
             hdr_oob = np.zeros(c, dtype=OOB_DTYPE)
             hdr_oob["lba"] = INVALID_LBA
-            new.zone_write(zone, 0, hdr_chunk, hdr_oob)
-            ost = self.open_segments.get(info.seg_id)
-            if ost is not None:
-                n_chunks = self._zone_chunk_count(rec, drive_idx)
-            else:
-                n_chunks = info.n_stripes
-            meta = np.zeros(n_chunks * c, dtype=OOB_DTYPE)
-            meta["lba"] = INVALID_LBA
-            if self.cfg.batched and n_chunks:
-                # whole-zone batched reconstruction: per-drive gather reads,
-                # one fused decode per surviving-role set, one ordered write
-                chunks, oob_all = self._reconstruct_chunks(
-                    rec, drive_idx, np.arange(n_chunks)
-                )
-                meta[:] = oob_all.reshape(-1)
-                new.zone_write(
-                    zone, info.data_start(), chunks.reshape(-1, bb), meta
-                )
-                self.stats.recovery_blocks_read += n_chunks * self.scheme.k * c
-            else:
-                for chunk_idx in range(n_chunks):
-                    chunk = self._reconstruct_chunk(rec, drive_idx, chunk_idx)
-                    oobs = self._reconstruct_oob(rec, drive_idx, chunk_idx)
-                    off = info.data_start() + chunk_idx * c
-                    new.zone_write(zone, off, chunk, oobs)
-                    meta[chunk_idx * c : (chunk_idx + 1) * c] = oobs
-                    self.stats.recovery_blocks_read += self.scheme.k * c
-            if ost is not None:
-                ost.meta[drive_idx, : n_chunks * c] = meta
-            if info.state == int(SegmentState.SEALED):
-                foot = pack_footer(meta, bb)
-                foot_oob = np.zeros(foot.shape[0], dtype=OOB_DTYPE)
-                foot_oob["lba"] = INVALID_LBA
-                new.zone_write(zone, int(new.wp[zone]), foot, foot_oob)
-                new.finish_zone(zone)
+            s_max, _ = self._layout_for(c)
+            meta_buf = np.zeros(s_max * c, dtype=OOB_DTYPE)
+            tmpl = (hdr_chunk, hdr_oob, meta_buf)
+            scaffold[chunk_blocks] = tmpl
+        return tmpl
+
+    def _rebuild_segment(
+        self, rec: _SegmentRecord, drive_idx: int, scaffold: dict
+    ) -> None:
+        """Reconstruct one segment's zone onto the (already replaced) drive.
+
+        ``rebuild_drive`` calls this for every live segment; the timed
+        pipeline's paced rebuild actor calls it one segment per tick so the
+        reconstruction traffic contends with foreground I/O over time.
+        ``scaffold`` is the caller-held scratch-buffer cache (see
+        :meth:`_rebuild_scaffold`) -- required, so the per-segment
+        reallocation this refactor removed cannot quietly return."""
+        new = self.drives[drive_idx]
+        info = rec.info
+        zone = info.zone_ids[drive_idx]
+        c = info.chunk_blocks
+        bb = self.zns_cfg.block_bytes
+        hdr_chunk, hdr_oob, meta_buf = self._rebuild_scaffold(scaffold, c)
+        hdr_chunk[:] = 0
+        hdr_chunk[0] = pack_header(info, bb)
+        new.zone_write(zone, 0, hdr_chunk, hdr_oob)
+        # how far was this zone written? mirror a surviving zone's shape:
+        # sealed => full layout; open => per-CST/our records
+        ost = self.open_segments.get(info.seg_id)
+        if ost is not None:
+            n_chunks = self._zone_chunk_count(rec, drive_idx)
+        else:
+            n_chunks = info.n_stripes
+        meta = meta_buf[: n_chunks * c]
+        meta[:] = np.zeros((), dtype=OOB_DTYPE)
+        meta["lba"] = INVALID_LBA
+        if self.cfg.batched and n_chunks:
+            # whole-zone batched reconstruction: per-drive gather reads,
+            # one fused decode per surviving-role set, one ordered write
+            chunks, oob_all = self._reconstruct_chunks(
+                rec, drive_idx, np.arange(n_chunks)
+            )
+            meta[:] = oob_all.reshape(-1)
+            new.zone_write(
+                zone, info.data_start(), chunks.reshape(-1, bb), meta
+            )
+            self.stats.recovery_blocks_read += n_chunks * self.scheme.k * c
+        else:
+            for chunk_idx in range(n_chunks):
+                chunk = self._reconstruct_chunk(rec, drive_idx, chunk_idx)
+                oobs = self._reconstruct_oob(rec, drive_idx, chunk_idx)
+                off = info.data_start() + chunk_idx * c
+                new.zone_write(zone, off, chunk, oobs)
+                meta[chunk_idx * c : (chunk_idx + 1) * c] = oobs
+                self.stats.recovery_blocks_read += self.scheme.k * c
+        if ost is not None:
+            ost.meta[drive_idx, : n_chunks * c] = meta
+        if info.state == int(SegmentState.SEALED):
+            foot = pack_footer(meta, bb)
+            foot_oob = np.zeros(foot.shape[0], dtype=OOB_DTYPE)
+            foot_oob["lba"] = INVALID_LBA
+            new.zone_write(zone, int(new.wp[zone]), foot, foot_oob)
+            new.finish_zone(zone)
+        self._rebuild_pending.discard((info.seg_id, drive_idx))
 
     def _zone_chunk_count(self, rec: _SegmentRecord, drive_idx: int) -> int:
         """Chunks committed to (open) segment on this drive = stripes written."""

@@ -323,20 +323,103 @@ class HandlerPipeline:
         rec.note_counts.clear()
         self.counters = {s: 0 for s in self.STAGES}
 
-    # -- failure/rebuild actors (timed mode) --------------------------------
+    # -- failure/rebuild/GC actors (timed mode) -----------------------------
 
     def schedule_drive_failure(self, drive_idx: int, at: float) -> None:
         self.engine.at(at, self.array.fail_drive, drive_idx)
 
-    def schedule_rebuild(self, drive_idx: int, at: float) -> None:
-        """Full-drive rebuild as an engine actor contending for device time."""
-        self.engine.at(at, self._ev_rebuild, drive_idx)
+    def schedule_rebuild(
+        self, drive_idx: int, at: float, interval_us: float = 0.0
+    ) -> None:
+        """Full-drive rebuild as an engine actor contending for device time.
+
+        With ``interval_us == 0`` the whole rebuild books at once (one burst
+        of device traffic).  With ``interval_us > 0`` the rebuild is *paced*:
+        open segments are reconstructed up front (they still take appends),
+        then sealed segments one per tick, with every not-yet-rebuilt zone
+        registered in the array's ``_rebuild_pending`` set so foreground
+        reads route through reconstruction instead of returning the
+        replacement drive's zeroed media."""
+        if interval_us <= 0.0:
+            self.engine.at(at, self._ev_rebuild, drive_idx)
+        else:
+            self.engine.at(at, self._ev_rebuild_start, drive_idx, interval_us)
 
     def _ev_rebuild(self, drive_idx: int) -> None:
         eng = self.engine
         mark = eng.mark_io()
         self.array.rebuild_drive(drive_idx)
         self.recorder.note("rebuild_device_us", max(0.0, eng.io_watermark - mark))
+
+    def _ev_rebuild_start(self, drive_idx: int, interval_us: float) -> None:
+        arr = self.array
+        eng = self.engine
+        mark = eng.mark_io()
+        arr._sync_pending()
+        arr.drives[drive_idx].replace()
+        scaffold: dict = {}
+        sealed_ids = []
+        for rec in sorted(arr.segments.values(), key=lambda r: r.info.seg_id):
+            if rec.info.seg_id in arr.open_segments:
+                # open segments take new appends between ticks, so their
+                # zones must be whole before foreground writes resume
+                arr._rebuild_segment(rec, drive_idx, scaffold)
+            else:
+                arr._rebuild_pending.add((rec.info.seg_id, drive_idx))
+                sealed_ids.append(rec.info.seg_id)
+        self.recorder.note("rebuild_device_us", max(0.0, eng.io_watermark - mark))
+        if sealed_ids:
+            eng.at(eng.now + interval_us, self._ev_rebuild_step,
+                   drive_idx, sealed_ids, 0, interval_us, scaffold)
+
+    def _ev_rebuild_step(
+        self, drive_idx: int, seg_ids: list, i: int, interval_us: float, scaffold: dict
+    ) -> None:
+        arr = self.array
+        eng = self.engine
+        rec = arr.segments.get(seg_ids[i])
+        if rec is not None:
+            mark = eng.mark_io()
+            arr._rebuild_segment(rec, drive_idx, scaffold)
+            self.recorder.note("rebuild_device_us", max(0.0, eng.io_watermark - mark))
+        else:
+            # the segment was GC'd while pending; nothing left to rebuild
+            arr._rebuild_pending.discard((seg_ids[i], drive_idx))
+        self.counters["segment_state"] += 1
+        if i + 1 < len(seg_ids):
+            eng.at(eng.now + interval_us, self._ev_rebuild_step,
+                   drive_idx, seg_ids, i + 1, interval_us, scaffold)
+
+    def schedule_gc(
+        self,
+        at: float,
+        interval_us: float,
+        n_ticks: int = 1,
+        watermark: Optional[int] = None,
+    ) -> None:
+        """Rate-limited background-GC actor: every ``interval_us`` run at
+        most one ``gc_once`` pass while free segments sit below
+        ``watermark`` (default: one above the array's inline-GC trigger, so
+        the actor cleans *proactively* and the write path rarely stalls on
+        an inline GC burst).  Collection and restage book device time on the
+        timed drives, so foreground tail latency under GC pressure becomes a
+        measurable QoS figure (``notes["gc_device_us"]`` totals the actor's
+        device traffic, ``note_counts`` its runs)."""
+        if watermark is None:
+            watermark = self.array.cfg.gc_free_segments_low + 1
+        self.engine.at(at, self._ev_gc_tick, interval_us, n_ticks, watermark)
+
+    def _ev_gc_tick(self, interval_us: float, remaining: int, watermark: int) -> None:
+        arr = self.array
+        eng = self.engine
+        if arr.free_segment_count() < watermark:
+            mark = eng.mark_io()
+            arr.gc_once()
+            self.counters["cleaning"] += 1
+            self.recorder.note("gc_device_us", max(0.0, eng.io_watermark - mark))
+        if remaining > 1:
+            eng.at(eng.now + interval_us, self._ev_gc_tick,
+                   interval_us, remaining - 1, watermark)
 
     # -- stages (synchronous mode) ------------------------------------------
 

@@ -42,6 +42,15 @@ class RaidScheme:
     def drive_to_role(self, drive: int, stripe_seq: int) -> int:
         return (drive - self.rotation(stripe_seq)) % self.n
 
+    def rotation_many(self, stripe_seqs: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`rotation` (batched commit/harvest paths)."""
+        seqs = np.asarray(stripe_seqs, dtype=np.int64)
+        return seqs % self.n if self.rotate else np.zeros(seqs.shape, np.int64)
+
+    def drive_to_role_many(self, drive: int, stripe_seqs: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`drive_to_role` for one drive across stripes."""
+        return (drive - self.rotation_many(stripe_seqs)) % self.n
+
 
 def make_scheme(name: str, n_drives: int) -> RaidScheme:
     name = name.lower()

@@ -20,6 +20,17 @@ from the persistent state of the drives after a crash, in the paper's order:
 
 Because writes are acknowledged only after the whole stripe persists,
 discarding partial stripes never loses acknowledged data.
+
+With ``cfg.batched`` (the default) the scan pipeline is vectorized end to
+end: one cross-zone header gather per drive with a vectorized magic
+pre-filter, whole-data-region OOB scans resolved with numpy (no per-chunk
+Python loops), winner resolution as one lexsort over every harvested
+``(key, ts, pba)`` triple (latest ts wins, first-encountered wins ties --
+exactly the scalar dict semantics), and bulk L2P/validity installation via
+``set_many`` / ``_mark_valid_many``.  ``cfg.batched=False`` keeps the
+per-chunk/per-block scan loops as the bit-identical scalar baseline; both
+paths share the vectorized installer, so recovered state is identical by
+construction.
 """
 from __future__ import annotations
 
@@ -29,11 +40,12 @@ import numpy as np
 
 from repro.core.array import ZapRaidConfig, ZapRAIDArray, _OpenSegment, _SegmentRecord
 from repro.core.group_layout import CompactStripeTable
-from repro.core.l2p import NO_PBA, pack_pba, unpack_pba
+from repro.core.l2p import NO_PBA, pack_pba, pack_pba_many, unpack_pba, unpack_pba_many
 from repro.core.segment import (
     SegmentClass,
     SegmentInfo,
     SegmentState,
+    header_candidates,
     solve_stripes_per_segment,
     unpack_footer,
     unpack_header,
@@ -49,7 +61,8 @@ class _FoundSegment:
     sealed: bool = False
     dirty: bool = False
     complete_seqs: set = dataclasses.field(default_factory=set)
-    chunk_meta: dict = dataclasses.field(default_factory=dict)  # (drive, chunk) -> oob rows
+    # drive -> (n_chunks, C) OOB rows for the persisted data-region prefix
+    meta: dict = dataclasses.field(default_factory=dict)
 
     def data_end(self) -> int:
         return self.info.data_start() + self.info.n_stripes * self.info.chunk_blocks
@@ -60,8 +73,23 @@ class _FoundSegment:
     def data_complete(self) -> bool:
         return all(wp >= self.data_end() for wp in self.wps)
 
+    def complete_arr(self) -> np.ndarray:
+        return np.fromiter(sorted(self.complete_seqs), np.int64, len(self.complete_seqs))
+
+
+def _note_segment(found, info, drives, zns_cfg) -> None:
+    s, foot = solve_stripes_per_segment(
+        zns_cfg.zone_cap_blocks, info.chunk_blocks, zns_cfg.block_bytes
+    )
+    info.n_stripes = s
+    fs = _FoundSegment(info=info, wps=[0] * len(info.zone_ids), footer_blocks=foot)
+    for drive_idx, zid in enumerate(info.zone_ids):
+        fs.wps[drive_idx] = int(drives[drive_idx].wp[zid])
+    found[info.seg_id] = fs
+
 
 def _scan_headers(drives, zns_cfg, stats) -> dict[int, _FoundSegment]:
+    """Per-zone header reads + unpack (the scalar baseline)."""
     found: dict[int, _FoundSegment] = {}
     for d in drives:
         for z in range(zns_cfg.n_zones):
@@ -71,45 +99,86 @@ def _scan_headers(drives, zns_cfg, stats) -> dict[int, _FoundSegment]:
             stats.recovery_blocks_read += 1
             if info is None or info.seg_id in found:
                 continue
-            s, foot = solve_stripes_per_segment(
-                zns_cfg.zone_cap_blocks, info.chunk_blocks, zns_cfg.block_bytes
-            )
-            info.n_stripes = s
-            fs = _FoundSegment(
-                info=info, wps=[0] * len(info.zone_ids), footer_blocks=foot
-            )
-            for drive_idx, zid in enumerate(info.zone_ids):
-                fs.wps[drive_idx] = int(drives[drive_idx].wp[zid])
-            found[info.seg_id] = fs
+            _note_segment(found, info, drives, zns_cfg)
     return found
 
 
-def _scan_stripes(fs: _FoundSegment, drives, stats) -> None:
-    """OOB-scan the data region; classify complete vs partial stripes."""
+def _scan_headers_batched(drives, zns_cfg, stats) -> dict[int, _FoundSegment]:
+    """One cross-zone header gather per drive + vectorized magic pre-filter."""
+    found: dict[int, _FoundSegment] = {}
+    for d in drives:
+        zs = np.flatnonzero((np.asarray(d.state) != ZoneState.EMPTY) & (d.wp > 0))
+        if zs.size == 0:
+            continue
+        blocks = d.read_scattered(zs, np.zeros(zs.size, np.int64))
+        stats.recovery_blocks_read += int(zs.size)
+        for i in np.flatnonzero(header_candidates(blocks)):
+            info = unpack_header(blocks[i])
+            if info is None or info.seg_id in found:
+                continue
+            _note_segment(found, info, drives, zns_cfg)
+    return found
+
+
+def _read_zone_oob(fs: _FoundSegment, drives, drive_idx: int, stats):
+    """(n_chunks, C) OOB rows of one zone's persisted data prefix, or None."""
     info = fs.info
     c = info.chunk_blocks
     data_start = info.data_start()
-    per_seq_count: dict[int, int] = {}
-    for drive_idx, z in enumerate(info.zone_ids):
-        usable = min(fs.wps[drive_idx], fs.data_end()) - data_start
-        n_chunks = max(0, usable) // c  # trailing partial chunks are dropped
-        if n_chunks <= 0:
-            continue
-        oob = drives[drive_idx].read_oob(z, data_start, n_chunks * c)
-        stats.recovery_blocks_read += n_chunks * c
-        for chunk in range(n_chunks):
-            rows = oob[chunk * c : (chunk + 1) * c].copy()
-            seq = int(rows["stripe"][0])
-            per_seq_count[seq] = per_seq_count.get(seq, 0) + 1
-            fs.chunk_meta[(drive_idx, chunk)] = rows
-    n = info.n_drives
-    fs.complete_seqs = {s for s, cnt in per_seq_count.items() if cnt == n}
-    fs.dirty = any(cnt != n for cnt in per_seq_count.values())
-    # a drive with committed blocks beyond complete chunks is also dirty
-    for drive_idx in range(n):
+    usable = min(fs.wps[drive_idx], fs.data_end()) - data_start
+    n_chunks = max(0, usable) // c  # trailing partial chunks are dropped
+    if n_chunks <= 0:
+        return None
+    z = info.zone_ids[drive_idx]
+    oob = drives[drive_idx].read_oob(z, data_start, n_chunks * c)
+    stats.recovery_blocks_read += n_chunks * c
+    return oob.reshape(n_chunks, c).copy()
+
+
+def _ragged_tail(fs: _FoundSegment) -> bool:
+    """A drive with committed blocks beyond whole chunks is also dirty."""
+    c = fs.info.chunk_blocks
+    data_start = fs.info.data_start()
+    for drive_idx in range(fs.info.n_drives):
         usable = min(fs.wps[drive_idx], fs.data_end()) - data_start
         if usable > 0 and usable % c != 0:
-            fs.dirty = True
+            return True
+    return False
+
+
+def _scan_stripes(fs: _FoundSegment, drives, stats) -> None:
+    """OOB-scan the data region; classify complete vs partial stripes
+    (scalar baseline: per-chunk Python loop)."""
+    per_seq_count: dict[int, int] = {}
+    for drive_idx in range(fs.info.n_drives):
+        rows = _read_zone_oob(fs, drives, drive_idx, stats)
+        if rows is None:
+            continue
+        fs.meta[drive_idx] = rows
+        for chunk in range(rows.shape[0]):
+            seq = int(rows["stripe"][chunk, 0])
+            per_seq_count[seq] = per_seq_count.get(seq, 0) + 1
+    n = fs.info.n_drives
+    fs.complete_seqs = {s for s, cnt in per_seq_count.items() if cnt == n}
+    fs.dirty = any(cnt != n for cnt in per_seq_count.values()) or _ragged_tail(fs)
+
+
+def _scan_stripes_batched(fs: _FoundSegment, drives, stats) -> None:
+    """Vectorized ``_scan_stripes``: per-drive bulk OOB read, stripe-id
+    completeness via one ``np.unique`` count over all drives' chunks."""
+    seq_parts: list[np.ndarray] = []
+    for drive_idx in range(fs.info.n_drives):
+        rows = _read_zone_oob(fs, drives, drive_idx, stats)
+        if rows is None:
+            continue
+        fs.meta[drive_idx] = rows
+        seq_parts.append(rows["stripe"][:, 0].astype(np.int64))
+    n = fs.info.n_drives
+    if seq_parts:
+        seqs, counts = np.unique(np.concatenate(seq_parts), return_counts=True)
+        fs.complete_seqs = set(seqs[counts == n].tolist())
+        fs.dirty = bool((counts != n).any())
+    fs.dirty = fs.dirty or _ragged_tail(fs)
 
 
 def _read_sealed_meta(fs: _FoundSegment, drives, zns_cfg, stats) -> None:
@@ -117,15 +186,15 @@ def _read_sealed_meta(fs: _FoundSegment, drives, zns_cfg, stats) -> None:
     info = fs.info
     c = info.chunk_blocks
     n_entries = info.n_stripes * c
+    all_seqs: list[np.ndarray] = []
     for drive_idx, z in enumerate(info.zone_ids):
         foot = drives[drive_idx].read(z, fs.data_end(), fs.footer_blocks)
         stats.recovery_blocks_read += foot.shape[0]
         entries = unpack_footer(foot, n_entries, zns_cfg.block_bytes)
-        for chunk in range(info.n_stripes):
-            fs.chunk_meta[(drive_idx, chunk)] = entries[chunk * c : (chunk + 1) * c]
-    fs.complete_seqs = {
-        int(rows["stripe"][0]) for rows in fs.chunk_meta.values()
-    }
+        rows = entries.reshape(info.n_stripes, c)
+        fs.meta[drive_idx] = rows
+        all_seqs.append(rows["stripe"][:, 0].astype(np.int64))
+    fs.complete_seqs = set(np.unique(np.concatenate(all_seqs)).tolist())
     fs.sealed = True
     fs.dirty = False
 
@@ -136,8 +205,13 @@ def recover_array(
     arr = ZapRAIDArray(cfg, zns_cfg, drives, _recovering=True)
     arr.disarm_crash()
     stats = arr.stats
+    batched = cfg.batched
 
-    found = _scan_headers(drives, zns_cfg, stats)
+    found = (
+        _scan_headers_batched(drives, zns_cfg, stats)
+        if batched
+        else _scan_headers(drives, zns_cfg, stats)
+    )
     valid, discard = [], []
     for fs in found.values():
         # paper Case 2: any zone below the header size => discard segment
@@ -151,6 +225,8 @@ def recover_array(
         fully_sealed = all(wp >= fs.seal_end() for wp in fs.wps)
         if fully_sealed:
             _read_sealed_meta(fs, drives, zns_cfg, stats)
+        elif batched:
+            _scan_stripes_batched(fs, drives, stats)
         else:
             _scan_stripes(fs, drives, stats)
 
@@ -178,26 +254,29 @@ def recover_array(
     _restore_open_slots(arr)
 
     # ---- latest-wins metadata resolution over ALL valid segments ----------
-    user_wins: dict[int, tuple[int, int]] = {}
-    map_wins: dict[int, tuple[int, int]] = {}
-    for fs in valid:
-        _harvest_meta(arr, fs, user_wins, map_wins)
+    if batched:
+        u_keys, u_ts, u_pbas, m_keys, m_ts, m_pbas = _harvest_meta_batched(arr, valid)
+    else:
+        user_wins: dict[int, tuple[int, int]] = {}
+        map_wins: dict[int, tuple[int, int]] = {}
+        for fs in valid:
+            _harvest_meta(arr, fs, user_wins, map_wins)
+        u_keys, u_ts, u_pbas = _wins_arrays(user_wins)
+        m_keys, m_ts, m_pbas = _wins_arrays(map_wins)
 
     # Fast-forward the timestamp clock past everything on disk, and seed the
     # per-LBA commit timestamps so post-recovery writes are never "stale".
-    max_ts = max(
-        [ts for ts, _ in user_wins.values()] + [ts for ts, _ in map_wins.values()],
-        default=0,
-    )
+    max_ts = max(int(np.max(u_ts, initial=0)), int(np.max(m_ts, initial=0)))
     arr.ts_counter = max(arr.ts_counter, max_ts + 1)
-    for lba, (ts, _) in user_wins.items():
-        arr._lba_ts[lba] = ts
-    for gid, (ts, _) in map_wins.items():
-        arr._gid_ts[gid] = ts
+    arr._lba_ts[u_keys] = u_ts.astype(np.uint64)
+    for i in range(m_keys.size):
+        arr._gid_ts[int(m_keys[i])] = int(m_ts[i])
 
     dirty_ids = {fs.info.seg_id for fs in dirty}
     # ---- re-inject winning blocks that live in dirty segments -------------
-    reinjected_gids = _reinject(arr, dirty, user_wins, map_wins, dirty_ids, drives)
+    reinjected_gids = _reinject(
+        arr, dirty, u_keys, u_ts, u_pbas, m_keys, m_ts, m_pbas, dirty_ids, drives
+    )
     arr.flush()
     for fs in dirty:
         for drive_idx, z in enumerate(fs.info.zone_ids):
@@ -205,7 +284,9 @@ def recover_array(
             arr.free_zones[drive_idx].append(z)
 
     # ---- apply the remaining (clean-segment) wins --------------------------
-    _apply_wins(arr, user_wins, map_wins, dirty_ids, reinjected_gids)
+    _apply_wins(
+        arr, u_keys, u_ts, u_pbas, m_keys, m_ts, m_pbas, dirty_ids, reinjected_gids
+    )
 
     # ---- re-seal data-complete segments missing their footers --------------
     for ost in list(arr.open_segments.values()):
@@ -220,6 +301,11 @@ def _install_segment(arr: ZapRAIDArray, fs: _FoundSegment, zns_cfg) -> None:
     rec = _SegmentRecord(info)
     arr.segments[info.seg_id] = rec
     c = info.chunk_blocks
+
+    def fill_open_meta(ost: _OpenSegment) -> None:
+        for d, rows in fs.meta.items():
+            ost.meta[d, : rows.shape[0] * c] = rows.reshape(-1)
+
     if fs.sealed or fs.data_complete():
         info.state = int(SegmentState.SEALED)
         info.stripes_written = info.n_stripes
@@ -228,26 +314,27 @@ def _install_segment(arr: ZapRAIDArray, fs: _FoundSegment, zns_cfg) -> None:
             # re-seal pass below writes the footer.
             info.state = int(SegmentState.OPEN)
             ost = _OpenSegment(info, zns_cfg.block_bytes)
-            for (d, chunk), rows in fs.chunk_meta.items():
-                ost.meta[d, chunk * c : (chunk + 1) * c] = rows
+            fill_open_meta(ost)
             arr.open_segments[info.seg_id] = ost
             rec.cst = ost.cst
     else:
         info.state = int(SegmentState.OPEN)
-        per_drive: dict[int, int] = {}
-        for (d, chunk) in fs.chunk_meta:
-            per_drive[d] = max(per_drive.get(d, -1), chunk)
-        info.stripes_written = min((v + 1 for v in per_drive.values()), default=0)
+        info.stripes_written = min(
+            (rows.shape[0] for rows in fs.meta.values()), default=0
+        )
         ost = _OpenSegment(info, zns_cfg.block_bytes)
-        for (d, chunk), rows in fs.chunk_meta.items():
-            ost.meta[d, chunk * c : (chunk + 1) * c] = rows
+        fill_open_meta(ost)
         arr.open_segments[info.seg_id] = ost
         rec.cst = ost.cst
     if info.uses_append:
         if rec.cst is None:
             rec.cst = CompactStripeTable(info.n_drives, info.n_stripes, info.group_size)
-        for (d, chunk), rows in fs.chunk_meta.items():
-            rec.cst.record(d, chunk, int(rows["stripe"][0]) % info.group_size)
+        for d, rows in fs.meta.items():
+            rec.cst.record_many(
+                d,
+                np.arange(rows.shape[0]),
+                rows["stripe"][:, 0].astype(np.int64) % info.group_size,
+            )
         if info.seg_id in arr.open_segments:
             arr.open_segments[info.seg_id].cst = rec.cst
 
@@ -281,49 +368,124 @@ def _restore_open_slots(arr: ZapRAIDArray) -> None:
 
 
 def _harvest_meta(arr, fs: _FoundSegment, user_wins, map_wins) -> None:
+    """Scalar harvest baseline: per-chunk/per-block loops into win dicts."""
     info = fs.info
     c = info.chunk_blocks
     scheme = arr.scheme
-    for (d, chunk), rows in fs.chunk_meta.items():
-        seq = int(rows["stripe"][0])
-        if not fs.sealed and seq not in fs.complete_seqs:
-            continue
-        if scheme.drive_to_role(d, seq) >= scheme.k:
-            continue  # parity chunk
-        for b in range(c):
-            lba_field = int(rows["lba"][b])
-            if lba_field == int(INVALID_LBA):
+    for d, rows_all in fs.meta.items():
+        for chunk in range(rows_all.shape[0]):
+            rows = rows_all[chunk]
+            seq = int(rows["stripe"][0])
+            if not fs.sealed and seq not in fs.complete_seqs:
                 continue
-            ts = int(rows["ts"][b])
-            pba = pack_pba(info.seg_id, d, info.data_start() + chunk * c + b)
-            if lba_field & 1:
-                gid = lba_field >> 1
-                if gid not in map_wins or map_wins[gid][0] < ts:
-                    map_wins[gid] = (ts, pba)
-            else:
-                lba = lba_field >> 1
-                if lba >= arr.cfg.logical_blocks:
+            if scheme.drive_to_role(d, seq) >= scheme.k:
+                continue  # parity chunk
+            for b in range(c):
+                lba_field = int(rows["lba"][b])
+                if lba_field == int(INVALID_LBA):
                     continue
-                if lba not in user_wins or user_wins[lba][0] < ts:
-                    user_wins[lba] = (ts, pba)
+                ts = int(rows["ts"][b])
+                pba = pack_pba(info.seg_id, d, info.data_start() + chunk * c + b)
+                if lba_field & 1:
+                    gid = lba_field >> 1
+                    if gid not in map_wins or map_wins[gid][0] < ts:
+                        map_wins[gid] = (ts, pba)
+                else:
+                    lba = lba_field >> 1
+                    if lba >= arr.cfg.logical_blocks:
+                        continue
+                    if lba not in user_wins or user_wins[lba][0] < ts:
+                        user_wins[lba] = (ts, pba)
 
 
-def _reinject(arr, dirty, user_wins, map_wins, dirty_ids, drives) -> set[int]:
+def _harvest_meta_batched(arr, valid):
+    """Vectorized harvest + winner resolution over every valid segment.
+
+    Gathers one ``(lba_field, ts, pba)`` triple per live data-region block
+    with numpy masks (complete-stripe filter, parity-role filter), then
+    resolves the per-key winner with a single lexsort: latest ts wins, and
+    among equal timestamps the first-encountered entry wins -- exactly the
+    scalar dict's strict-greater update semantics."""
+    scheme = arr.scheme
+    k = scheme.k
+    fields, tss, pbas = [], [], []
+    for fs in valid:
+        info = fs.info
+        c = info.chunk_blocks
+        ds = info.data_start()
+        comp = fs.complete_arr() if not fs.sealed else None
+        for d, rows in fs.meta.items():
+            seqs = rows["stripe"][:, 0].astype(np.int64)
+            keep = scheme.drive_to_role_many(d, seqs) < k
+            if comp is not None:
+                keep &= np.isin(seqs, comp)
+            ci = np.flatnonzero(keep)
+            if ci.size == 0:
+                continue
+            f = rows["lba"][ci].ravel().astype(np.uint64)
+            live = f != INVALID_LBA
+            if not live.any():
+                continue
+            offs = (ds + ci[:, None] * c + np.arange(c)[None, :]).ravel()
+            fields.append(f[live])
+            tss.append(rows["ts"][ci].ravel().astype(np.int64)[live])
+            pbas.append(pack_pba_many(info.seg_id, d, offs)[live])
+    empty = np.zeros(0, np.int64)
+    if not fields:
+        return empty, empty, empty, empty, empty, empty
+    f = np.concatenate(fields)
+    t = np.concatenate(tss)
+    p = np.concatenate(pbas)
+    is_map = (f & np.uint64(1)) != 0
+    keys = (f >> np.uint64(1)).astype(np.int64)
+    um = ~is_map & (keys < arr.cfg.logical_blocks)
+    u = _resolve_winners(keys[um], t[um], p[um])
+    m = _resolve_winners(keys[is_map], t[is_map], p[is_map])
+    return (*u, *m)
+
+
+def _resolve_winners(keys, ts, pbas):
+    """Latest-ts-wins per key; first-encountered wins ties."""
+    if keys.size == 0:
+        return keys, ts, pbas
+    idx = np.arange(keys.size)
+    order = np.lexsort((-idx, ts, keys))
+    kk = keys[order]
+    last = np.flatnonzero(np.r_[kk[1:] != kk[:-1], True])
+    w = order[last]
+    return keys[w], ts[w], pbas[w]
+
+
+def _wins_arrays(wins: dict) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Win dict -> (keys, ts, pbas) arrays (scalar harvest adapter)."""
+    n = len(wins)
+    keys = np.fromiter(wins.keys(), np.int64, n)
+    ts = np.fromiter((v[0] for v in wins.values()), np.int64, n)
+    pbas = np.fromiter((v[1] for v in wins.values()), np.int64, n)
+    return keys, ts, pbas
+
+
+def _reinject(
+    arr, dirty, u_keys, u_ts, u_pbas, m_keys, m_ts, m_pbas, dirty_ids, drives
+) -> set[int]:
     """Rewrite winning blocks whose only copy lives in a dirty segment."""
     by_seg: dict[int, _FoundSegment] = {fs.info.seg_id: fs for fs in dirty}
     reinjected_gids: set[int] = set()
+    if not dirty_ids:
+        return reinjected_gids
 
     def read_from_dirty(pba: int) -> np.ndarray:
         seg_id, d, off = unpack_pba(pba)
         fs = by_seg[seg_id]
         return drives[d].read(fs.info.zone_ids[d], off, 1)[0].copy()
 
+    dirty_arr = np.fromiter(sorted(dirty_ids), np.int64, len(dirty_ids))
+    ud = np.flatnonzero(np.isin(unpack_pba_many(u_pbas)[0], dirty_arr))
+    md = np.flatnonzero(np.isin(unpack_pba_many(m_pbas)[0], dirty_arr))
     items = [
-        (ts, lba, pba, 0) for lba, (ts, pba) in user_wins.items()
-        if unpack_pba(pba)[0] in dirty_ids
+        (int(u_ts[i]), int(u_keys[i]), int(u_pbas[i]), 0) for i in ud
     ] + [
-        (ts, gid, pba, 1) for gid, (ts, pba) in map_wins.items()
-        if unpack_pba(pba)[0] in dirty_ids
+        (int(m_ts[i]), int(m_keys[i]), int(m_pbas[i]), 1) for i in md
     ]
     items.sort()
     for ts, key, pba, is_map in items:
@@ -337,56 +499,76 @@ def _reinject(arr, dirty, user_wins, map_wins, dirty_ids, drives) -> set[int]:
     return reinjected_gids
 
 
-def _apply_wins(arr: ZapRAIDArray, user_wins, map_wins, dirty_ids, reinjected_gids) -> None:
+def _apply_wins(
+    arr: ZapRAIDArray,
+    u_keys, u_ts, u_pbas, m_keys, m_ts, m_pbas,
+    dirty_ids, reinjected_gids,
+) -> None:
+    """Install the surviving winners: mapping table + bulk L2P (``set_many``)
+    + bulk validity (``_mark_valid_many``), preserving the paper's stay-
+    offloaded rule for entry groups whose mapping block is newest."""
     epg = arr.l2p.epg
-    group_max_ts: dict[int, int] = {}
-    dirty_winner_gids: set[int] = set()
-    for lba, (ts, pba) in user_wins.items():
-        gid = lba // epg
-        group_max_ts[gid] = max(group_max_ts.get(gid, 0), ts)
-        if unpack_pba(pba)[0] in dirty_ids:
-            # the group's authoritative copy moved during re-injection; the
-            # on-SSD mapping block is stale, so the group must stay resident.
-            dirty_winner_gids.add(gid)
-    offloaded: set[int] = set()
-    for gid, (mts, pba) in map_wins.items():
-        if gid not in reinjected_gids and unpack_pba(pba)[0] not in dirty_ids:
+    dirty_arr = (
+        np.fromiter(sorted(dirty_ids), np.int64, len(dirty_ids))
+        if dirty_ids else np.zeros(0, np.int64)
+    )
+    u_dirty = np.isin(unpack_pba_many(u_pbas)[0], dirty_arr)
+    gids_of = u_keys // epg
+    n_groups = arr.l2p.n_groups
+    gmax = np.full(n_groups, -1, np.int64)
+    ub = gids_of < n_groups
+    np.maximum.at(gmax, gids_of[ub], u_ts[ub])
+    # groups whose authoritative copy moved during re-injection: the on-SSD
+    # mapping block is stale, so the group must stay resident
+    dirty_winner_gids = set(np.unique(gids_of[u_dirty]).tolist())
+    m_dirty = np.isin(unpack_pba_many(m_pbas)[0], dirty_arr)
+    offloaded: list[int] = []
+    map_installed: list[int] = []
+    for i in range(m_keys.size):
+        gid, mts, pba = int(m_keys[i]), int(m_ts[i]), int(m_pbas[i])
+        if gid not in reinjected_gids and not m_dirty[i]:
             arr.mapping_table[gid] = pba
-            _mark_valid(arr, pba)
+            map_installed.append(pba)
         if (
             arr.l2p.offload
-            and mts >= group_max_ts.get(gid, -1)
+            and mts >= (int(gmax[gid]) if gid < n_groups else -1)
             and gid not in dirty_winner_gids
             and gid not in reinjected_gids
         ):
-            offloaded.add(gid)
-    for lba, (ts, pba) in user_wins.items():
-        if unpack_pba(pba)[0] in dirty_ids:
-            continue  # re-injected already; L2P points at the new copy
-        if lba // epg in offloaded:
-            _mark_valid(arr, pba)  # entry stays on the SSD mapping block
-            continue
-        arr.l2p.set(lba, pba)
-        _mark_valid(arr, pba)
-    # ensure offloaded groups' referenced blocks are marked valid, then drop
-    # the in-memory copies (the paper keeps them on SSD).
+            offloaded.append(gid)
+    _mark_valid_many(arr, np.fromiter(map_installed, np.int64, len(map_installed)))
+    off_arr = np.fromiter(offloaded, np.int64, len(offloaded))
+    u_off = np.isin(gids_of, off_arr)
+    install = ~u_dirty & ~u_off
+    arr.l2p.set_many(u_keys[install], u_pbas[install])
+    # dirty winners were re-injected (L2P points at the new copy already);
+    # offloaded-group entries stay on the SSD but their blocks are live
+    _mark_valid_many(arr, u_pbas[~u_dirty])
     for gid in offloaded:
         entries = arr._read_mapping_block(gid)
         if entries is None:
             continue
-        for pba in entries:
-            if int(pba) != int(NO_PBA):
-                _mark_valid(arr, int(pba))
+        live = np.asarray(entries, np.int64)
+        _mark_valid_many(arr, live[live != int(NO_PBA)])
         arr.l2p.drop_group(gid)
     arr._drain_meta()
 
 
-def _mark_valid(arr: ZapRAIDArray, pba: int) -> None:
-    seg_id, d, off = unpack_pba(pba)
-    rec = arr.segments.get(seg_id)
-    if rec is None:
+def _mark_valid_many(arr: ZapRAIDArray, pbas: np.ndarray) -> None:
+    """Vectorized ``_mark_valid``: set validity bits + counts per segment."""
+    pbas = np.unique(np.asarray(pbas, np.int64))
+    if pbas.size == 0:
         return
-    didx = off - rec.info.data_start()
-    if 0 <= didx < rec.valid.shape[1] and not rec.valid[d, didx]:
+    segs, drvs, offs = unpack_pba_many(pbas)
+    for seg_id in np.unique(segs):
+        rec = arr.segments.get(int(seg_id))
+        if rec is None:
+            continue
+        sel = segs == seg_id
+        didx = offs[sel] - rec.info.data_start()
+        d = drvs[sel]
+        inb = (didx >= 0) & (didx < rec.valid.shape[1])
+        d, didx = d[inb], didx[inb]
+        cur = rec.valid[d, didx]
         rec.valid[d, didx] = True
-        rec.valid_count += 1
+        rec.valid_count += int((~cur).sum())

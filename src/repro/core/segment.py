@@ -125,6 +125,20 @@ def pack_header(info: SegmentInfo, block_bytes: int) -> np.ndarray:
     return buf
 
 
+def header_candidates(blocks: np.ndarray) -> np.ndarray:
+    """Vectorized pre-filter for a batch of would-be header blocks.
+
+    ``blocks`` is (n, block_bytes) uint8; returns a bool mask of rows whose
+    magic and version fields match, so the batched recovery scanner only
+    struct-unpacks real headers instead of every written zone's block 0."""
+    if blocks.shape[0] == 0:
+        return np.zeros(0, dtype=bool)
+    magic = np.frombuffer(HEADER_MAGIC, dtype=np.uint8)
+    ok = (blocks[:, :4] == magic[None, :]).all(axis=1)
+    ver = blocks[:, 4].astype(np.uint16) | (blocks[:, 5].astype(np.uint16) << 8)
+    return ok & (ver == HEADER_VERSION)
+
+
 def unpack_header(block: np.ndarray) -> SegmentInfo | None:
     raw = block.tobytes()
     head_sz = struct.calcsize("<4sHHqHHqqHqH")

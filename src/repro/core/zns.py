@@ -240,6 +240,16 @@ class SimZnsDrive:
         self._check_alive()
         return self.data[zone, np.asarray(offsets, dtype=np.int64)]
 
+    def read_scattered(self, zones: np.ndarray, offsets: np.ndarray) -> np.ndarray:
+        """Cross-zone gather: block ``offsets[i]`` of ``zones[i]`` for each i.
+
+        The recovery scanner's primitive -- e.g. every zone's header block in
+        one command instead of one read per zone."""
+        self._check_alive()
+        return self.data[
+            np.asarray(zones, dtype=np.int64), np.asarray(offsets, dtype=np.int64)
+        ]
+
     def read_oob_blocks(self, zone: int, offsets: np.ndarray) -> np.ndarray:
         """Gather scattered OOB entries of one zone."""
         self._check_alive()

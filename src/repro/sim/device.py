@@ -217,6 +217,11 @@ class TimedDrive(SimZnsDrive):
         self.book_read(len(offsets), self.engine.now)
         return out
 
+    def read_scattered(self, zones, offsets):
+        out = super().read_scattered(zones, offsets)
+        self.book_read(len(offsets), self.engine.now)
+        return out
+
     def replace(self) -> None:
         super().replace()
         self.reset_timing()  # fresh hardware: empty queues, idle channels
