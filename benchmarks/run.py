@@ -13,10 +13,11 @@ each benchmark name to its measured ``us_per_call`` and ``derived`` figure,
 so the perf trajectory can be tracked across PRs.  Each command maps to its
 own file so no sweep clobbers another's baseline: ``--quick`` (small shapes,
 cheap subset, carries the perf acceptance figures) writes the committed
-``BENCH_PR5.json``; full runs write ``BENCH_FULL.json``; ``--only`` sweeps
+``BENCH_PR6.json``; full runs write ``BENCH_FULL.json``; ``--only`` sweeps
 skip the JSON unless ``--json PATH`` is given explicitly.  ``--check
-BENCH_PR5.json`` is the CI regression gate: it reruns the quick set and
-fails on a >25% wall-clock regression against the committed baseline.
+BENCH_PR6.json`` is the CI regression gate: it reruns the quick set and
+fails on a >25% wall-clock regression against the committed baseline
+(virtual-time ``service/*`` rows gate unscaled -- they are deterministic).
 
 Timed scenarios (``exp10/trace_timed_*``, ``qos/*``) run on the
 discrete-event engine (``repro.sim``): their ``us_per_call`` column is a
@@ -708,6 +709,35 @@ def bench_checkpoint():
     emit("ckpt/degraded_restore_256KiB", us, f"{nbytes/us:.1f}MB/s_sim")
 
 
+# ------------------------------------------------------- service tier
+
+
+def bench_service():
+    """Async block-device service (PR 6): closed-loop QD saturation and the
+    QoS-vs-FIFO serving-tail separation under checkpoint traffic at scale.
+    Virtual-time figures from the calibrated device model -- deterministic
+    for a given seed, gated by --check without machine-speed rescaling."""
+    from repro.service.scenario import checkpoint_under_serving, read_qd_sweep
+
+    rows = read_qd_sweep(qds=(1, 4, 16, 32), n_ops=96 if QUICK else 192)
+    for r in rows:
+        emit(f"service/qd_sweep_qd{r['qd']}", r["p99_us"],
+             f"virtual_iops={r['virtual_iops']:.0f}")
+    sat = rows[-1]["virtual_iops"] / rows[0]["virtual_iops"]
+    emit("service/qd_sweep_scaling", sat,
+         f"iops_qd32_over_qd1={sat:.1f}x_saturating")
+
+    res = {}
+    for pol in ("qos", "fifo"):
+        res[pol] = checkpoint_under_serving(policy=pol)
+        emit(f"service/ckpt_vs_serve_p99_{pol}", res[pol]["serve_p99_us"],
+             f"ckpt_save_mean={res[pol]['ckpt_save_mean_us']:.0f}us_"
+             f"restore_ok={res[pol]['restore_ok']}")
+    gain = res["fifo"]["serve_p99_us"] / res["qos"]["serve_p99_us"]
+    emit("service/ckpt_vs_serve_gain", gain,
+         f"qos_cuts_serve_read_p99_{gain:.1f}x_vs_fifo")
+
+
 # ------------------------------------------------------------ straggler
 
 def bench_straggler():
@@ -730,7 +760,8 @@ ALL = [
     bench_raid_schemes, bench_recovery, bench_hybrid, bench_gc,
     bench_l2p_offload, bench_trace, bench_latency_qos, bench_e2e_write,
     bench_read_batched, bench_gc_pipeline, bench_recovery_pipeline,
-    bench_kernels_batched, bench_kernels, bench_checkpoint, bench_straggler,
+    bench_kernels_batched, bench_kernels, bench_checkpoint, bench_service,
+    bench_straggler,
 ]
 
 # --quick runs the cheap subset (each well under a minute on CPU)
@@ -738,7 +769,7 @@ QUICK_SET = [
     bench_zns_primitives, bench_group_size, bench_raid_schemes,
     bench_trace, bench_latency_qos, bench_e2e_write, bench_read_batched,
     bench_gc_pipeline, bench_recovery_pipeline, bench_kernels_batched,
-    bench_straggler,
+    bench_service, bench_straggler,
 ]
 
 
@@ -765,6 +796,13 @@ def write_json(path: str) -> None:
 CHECK_PREFIXES = (
     "e2e/seq_write_batched", "read/healthy_batched", "read/degraded_batched",
     "gc/batched_once", "recovery/batched",
+)
+# Virtual-time service rows: deterministic figures from the device model, so
+# they gate without the machine-speed rescale (scale 1.0) -- any drift is a
+# semantic change in the service/engine, not a slower host.  The gain row is
+# excluded: it *growing* is an improvement, which the gate would misread.
+CHECK_NOSCALE_PREFIXES = (
+    "service/qd_sweep_qd", "service/ckpt_vs_serve_p99_",
 )
 CHECK_SLACK = 1.25   # fail when us_per_call grows >25% over the baseline
 CHECK_MIN_US = 5.0   # skip sub-5us rows: timer/scheduler noise swamps them
@@ -809,8 +847,12 @@ def check_regressions(baseline_path: str) -> int:
         scale = min(3.0, max(0.5, calibration_us() / cal_old))
     failures, compared = [], 0
     for name, us, _ in ROWS:
-        old = base.get(name, {}).get("us_per_call", 0.0) * scale
-        if not name.startswith(CHECK_PREFIXES) or old < CHECK_MIN_US:
+        noscale = name.startswith(CHECK_NOSCALE_PREFIXES)
+        old = base.get(name, {}).get("us_per_call", 0.0) * (
+            1.0 if noscale else scale
+        )
+        if not name.startswith(CHECK_PREFIXES + CHECK_NOSCALE_PREFIXES) \
+                or old < CHECK_MIN_US:
             continue
         compared += 1
         if us > old * CHECK_SLACK:
@@ -833,7 +875,7 @@ def main() -> None:
                     help="small shapes / cheap subset for CI time budgets")
     ap.add_argument("--json", default=None,
                     help="machine-readable output path ('' to disable). "
-                         "Defaults: --quick -> BENCH_PR5.json (the committed "
+                         "Defaults: --quick -> BENCH_PR6.json (the committed "
                          "baseline: the quick set carries the perf acceptance "
                          "figures), full -> BENCH_FULL.json, "
                          "--only -> disabled; each command maps to one file "
@@ -852,7 +894,7 @@ def main() -> None:
         if args.only:
             json_path = ""
         else:
-            json_path = "BENCH_PR5.json" if args.quick else "BENCH_FULL.json"
+            json_path = "BENCH_PR6.json" if args.quick else "BENCH_FULL.json"
     print("name,us_per_call,derived")
     for fn in (QUICK_SET if QUICK else ALL):
         if args.only and args.only not in fn.__name__:

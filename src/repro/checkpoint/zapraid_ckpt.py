@@ -24,7 +24,8 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, Optional
+import math
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
@@ -81,20 +82,98 @@ def _flatten_state(state) -> tuple[list[tuple[str, np.ndarray]], Any]:
     return out, treedef
 
 
+@dataclasses.dataclass
+class SaveTicket:
+    """Future for an async (service-tier) checkpoint save."""
+
+    step: int
+    t_issue: float
+    manifest: dict
+    n_extents: int
+    done: bool = False
+    t_done: float = math.nan
+    cb: Optional[Callable[["SaveTicket"], None]] = None
+
+    @property
+    def latency_us(self) -> float:
+        return self.t_done - self.t_issue
+
+
+@dataclasses.dataclass
+class RestoreTicket:
+    """Future for an async (service-tier) checkpoint restore."""
+
+    step: int
+    t_issue: float
+    n_extents: int
+    done: bool = False
+    t_done: float = math.nan
+    state: Any = None
+    cb: Optional[Callable[["RestoreTicket"], None]] = None
+
+    @property
+    def latency_us(self) -> float:
+        return self.t_done - self.t_issue
+
+
 class CheckpointEngine:
-    def __init__(self, cfg: CheckpointConfig, logical_blocks: int = 1 << 14):
+    def __init__(
+        self,
+        cfg: CheckpointConfig,
+        logical_blocks: int = 1 << 14,
+        *,
+        array: Optional[ZapRAIDArray] = None,
+        lba_base: int = 0,
+        lba_span: Optional[int] = None,
+    ):
+        """``array`` lets many engines share one volume (e.g. the timed
+        array behind a block service), each confined to its own logical
+        window ``[lba_base, lba_base + lba_span)`` with its manifest at
+        ``lba_base`` -- the many-training-jobs layout."""
         self.cfg = cfg
         self.logical_blocks = logical_blocks
-        self.array = ZapRAIDArray(cfg.zap_cfg(logical_blocks), cfg.zns_cfg())
+        self.array = array if array is not None else ZapRAIDArray(
+            cfg.zap_cfg(logical_blocks), cfg.zns_cfg()
+        )
+        self.lba_base = lba_base
+        self.lba_span = logical_blocks - lba_base if lba_span is None else lba_span
+        assert self.lba_span > MANIFEST_LBAS, "window too small for a manifest"
+        assert self.lba_base + self.lba_span <= logical_blocks
         self.catalog: dict[int, dict] = {}  # step -> manifest
-        self._alloc_ptr = MANIFEST_LBAS  # bump allocator over the ring
+        self._alloc_ptr = lba_base + MANIFEST_LBAS  # bump allocator, ring
         self.saves = 0
+
+    @classmethod
+    def build_timed(
+        cls,
+        cfg: CheckpointConfig,
+        logical_blocks: int = 1 << 14,
+        *,
+        seed: int = 0,
+        flush_interval_us: float = 1000.0,
+        **engine_kw,
+    ):
+        """Checkpoint engine over a discrete-event timed pipeline.
+
+        Returns ``(ckpt, pipe)``; wrap ``pipe`` in a
+        :class:`repro.service.BlockDeviceService` and use
+        :meth:`save_async`/:meth:`restore_async` to stream checkpoints as
+        admission-controlled tenant traffic."""
+        from repro.core.handlers import HandlerPipeline
+
+        pipe = HandlerPipeline.build_timed(
+            cfg.zap_cfg(logical_blocks), cfg.zns_cfg(), seed=seed,
+            flush_interval_us=flush_interval_us, **engine_kw,
+        )
+        return cls(cfg, logical_blocks, array=pipe.array), pipe
 
     # ------------------------------------------------------------- space
 
     def _alloc(self, n_blocks: int) -> int:
-        if self._alloc_ptr + n_blocks > self.logical_blocks:
-            self._alloc_ptr = MANIFEST_LBAS  # wrap: old extents become stale
+        lo = self.lba_base + MANIFEST_LBAS
+        hi = self.lba_base + self.lba_span
+        if self._alloc_ptr + n_blocks > hi:
+            self._alloc_ptr = lo  # wrap: old extents become stale
         lba = self._alloc_ptr
         self._alloc_ptr += n_blocks
         return lba
@@ -109,12 +188,13 @@ class CheckpointEngine:
             if d.failed:
                 self.array.rebuild_drive(i)
 
-    def save(self, step: int, state) -> dict:
-        """Append a checkpoint for ``step``; returns its manifest."""
-        self._ensure_lanes()
+    def _stage_save(self, step: int, state) -> tuple[dict, list[tuple[int, np.ndarray]]]:
+        """Serialize ``state`` into block extents: allocation + packing,
+        shared by the sync and async save paths."""
         bb = self.cfg.block_bytes
         leaves, _ = _flatten_state(state)
         manifest = {"step": step, "leaves": {}}
+        extents: list[tuple[int, np.ndarray]] = []
         for name, arr in leaves:
             raw = arr.tobytes()
             n_blocks = max(1, -(-len(raw) // bb))
@@ -122,7 +202,7 @@ class CheckpointEngine:
             buf = np.zeros((n_blocks, bb), np.uint8)
             flat = np.frombuffer(raw, np.uint8)
             buf.reshape(-1)[: flat.size] = flat
-            self.array.write(lba, buf)
+            extents.append((lba, buf))
             manifest["leaves"][name] = {
                 "lba": lba,
                 "n_blocks": n_blocks,
@@ -130,6 +210,14 @@ class CheckpointEngine:
                 "dtype": str(arr.dtype),
                 "shape": list(arr.shape),
             }
+        return manifest, extents
+
+    def save(self, step: int, state) -> dict:
+        """Append a checkpoint for ``step``; returns its manifest."""
+        self._ensure_lanes()
+        manifest, extents = self._stage_save(step, state)
+        for lba, buf in extents:
+            self.array.write(lba, buf)
         self.array.flush()
         self.catalog[step] = manifest
         self._write_manifest()
@@ -137,7 +225,7 @@ class CheckpointEngine:
         self._retire_old()
         return manifest
 
-    def _write_manifest(self) -> None:
+    def _manifest_blocks(self) -> np.ndarray:
         bb = self.cfg.block_bytes
         blob = json.dumps(self.catalog).encode()
         n_blocks = -(-len(blob) // (bb - 8))
@@ -150,8 +238,97 @@ class CheckpointEngine:
         buf[0, :8] = header
         rest = buf.reshape(-1)[8:]
         rest[: flat.size] = flat
-        self.array.write(0, buf)
+        return buf
+
+    def _write_manifest(self) -> None:
+        self.array.write(self.lba_base, self._manifest_blocks())
         self.array.flush()
+
+    # ------------------------------------------------- async (service tier)
+
+    def save_async(self, step: int, state, *, service, tenant: str = "ckpt",
+                   at: Optional[float] = None, cb=None) -> SaveTicket:
+        """Stream a checkpoint through a block service as tenant traffic.
+
+        One write request per leaf extent enters the tenant's submission
+        queue (subject to its QoS class: token bucket, queue cap, in-flight
+        share); the manifest is submitted only after *every* extent has
+        acked, preserving the crash-ordering invariant of the sync path
+        (a manifest never points at unwritten extents).  The returned
+        ticket resolves at the manifest's device-completion time.
+
+        Unlike :meth:`save`, failed lanes are not rebuilt inline -- in the
+        timed world a rebuild is an engine actor
+        (``HandlerPipeline.schedule_rebuild``), not a synchronous call."""
+        manifest, extents = self._stage_save(step, state)
+        self.catalog[step] = manifest
+        self.saves += 1
+        self._retire_old()
+        mblocks = self._manifest_blocks()
+        ticket = SaveTicket(
+            step=step,
+            t_issue=service.engine.now if at is None else at,
+            manifest=manifest, n_extents=len(extents), cb=cb,
+        )
+        remaining = [len(extents)]
+
+        def manifest_done(req) -> None:
+            ticket.done = True
+            ticket.t_done = req.t_done
+            if ticket.cb:
+                ticket.cb(ticket)
+
+        def leaf_done(_req) -> None:
+            remaining[0] -= 1
+            if remaining[0] == 0:
+                service.submit_write(tenant, self.lba_base, mblocks,
+                                     cb=manifest_done)
+
+        if not extents:
+            service.submit_write(tenant, self.lba_base, mblocks, at=at,
+                                 cb=manifest_done)
+        for lba, buf in extents:
+            service.submit_write(tenant, lba, buf, at=at, cb=leaf_done)
+        return ticket
+
+    def restore_async(self, step: int, like, *, service, tenant: str = "ckpt",
+                      at: Optional[float] = None, cb=None) -> RestoreTicket:
+        """Async restore: one read request per leaf extent; the ticket
+        resolves (with ``.state`` holding the rebuilt pytree) when the last
+        read acks.  Degraded lanes restore transparently -- the reads take
+        the array's reconstruction path and simply book more device time."""
+        manifest = self.catalog.get(step)
+        if manifest is None:
+            raise KeyError(f"no checkpoint for step {step}")
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        entries = [manifest["leaves"][jax.tree_util.keystr(p)] for p, _ in flat]
+        results: list[Optional[np.ndarray]] = [None] * len(entries)
+        ticket = RestoreTicket(
+            step=step,
+            t_issue=service.engine.now if at is None else at,
+            n_extents=len(entries), cb=cb,
+        )
+        remaining = [len(entries)]
+
+        def leaf_done(idx: int, ent: dict, req) -> None:
+            raw = req.result.reshape(-1)[: ent["nbytes"]].tobytes()
+            results[idx] = np.frombuffer(raw, dtype=np.dtype(ent["dtype"])).reshape(
+                ent["shape"]
+            ).copy()
+            remaining[0] -= 1
+            if remaining[0] == 0:
+                ticket.state = jax.tree.unflatten(treedef, results)
+                ticket.done = True
+                ticket.t_done = req.t_done
+                if ticket.cb:
+                    ticket.cb(ticket)
+
+        for idx, ent in enumerate(entries):
+            service.submit_read(
+                tenant, ent["lba"], ent["n_blocks"], at=at,
+                cb=lambda req, i=idx, e=ent: leaf_done(i, e, req),
+            )
+        return ticket
 
     def _retire_old(self) -> None:
         steps = sorted(self.catalog)
@@ -199,20 +376,22 @@ class CheckpointEngine:
         new.array = recover_array(
             drives, self.cfg.zap_cfg(self.logical_blocks), self.cfg.zns_cfg()
         )
+        new.lba_base = self.lba_base
+        new.lba_span = self.lba_span
         new.catalog = {}
-        new._alloc_ptr = MANIFEST_LBAS
+        new._alloc_ptr = self.lba_base + MANIFEST_LBAS
         new.saves = 0
         new._load_manifest()
         return new
 
     def _load_manifest(self) -> None:
         bb = self.cfg.block_bytes
-        first = self.array.read(0, 1)
+        first = self.array.read(self.lba_base, 1)
         size = int(np.frombuffer(first[0, :8].tobytes(), np.int64)[0])
         if size <= 0 or size > MANIFEST_LBAS * bb:
             return  # no manifest yet
         n_blocks = -(-(size + 8) // bb)
-        blocks = self.array.read(0, n_blocks)
+        blocks = self.array.read(self.lba_base, n_blocks)
         blob = blocks.reshape(-1)[8 : 8 + size].tobytes()
         raw = json.loads(blob)
         self.catalog = {int(k): v for k, v in raw.items()}
@@ -222,7 +401,7 @@ class CheckpointEngine:
                 for m in self.catalog.values()
                 for e in m["leaves"].values()
             )
-            self._alloc_ptr = max(MANIFEST_LBAS, last)
+            self._alloc_ptr = max(self.lba_base + MANIFEST_LBAS, last)
 
     # ------------------------------------------------------------- stats
 

@@ -397,6 +397,19 @@ class ZapRAIDArray:
     def free_segment_count(self) -> int:
         return min(len(fz) for fz in self.free_zones)
 
+    def has_staged(self) -> bool:
+        """True while foreground work sits in volatile staging: buffered
+        blocks of partially filled stripes, a built-but-uncommitted stripe
+        group (double buffering), or mapping blocks awaiting their metadata
+        write.  The timed pipeline's timeout-flush tick and the service
+        tier's idle detection use this to decide whether a ``flush()`` is
+        still owed before the system may go quiet."""
+        return (
+            bool(self._buffered)
+            or self._pending_group is not None
+            or bool(self._pending_meta)
+        )
+
     # -------------------------------------------------------- segment opening
 
     def _open_initial_segments(self) -> None:

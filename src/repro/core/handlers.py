@@ -99,6 +99,12 @@ class HandlerPipeline:
             self._open_reqs = 0
             self._barriers: dict[int, float] = {}  # seg_id -> group-done time
             self._last_write_dispatch = 0.0
+            # External work source (e.g. the block service's submission
+            # queues): the timeout-flush tick keeps re-arming while it
+            # reports work, so a drained submission queue still flushes
+            # partially filled stripes (see ensure_flush_ticks).
+            self.busy_hook: Optional[Callable[[], bool]] = None
+            self._flush_tick_armed = False
             array.commit_listener = self._on_stripe_commit
             array.encode_listener = self._on_group_encode
             if array.cfg.append_order == "timed":
@@ -138,6 +144,7 @@ class HandlerPipeline:
             return
         t = self.engine.now if at is None else at
         self._open_reqs += 1
+        self.ensure_flush_ticks()
         # dispatch fires after the host-side submission cost; latency is
         # still measured from the arrival instant t
         self.engine.at(t + self.service.cpu_dispatch_us,
@@ -150,6 +157,7 @@ class HandlerPipeline:
             return
         t = self.engine.now if at is None else at
         self._open_reqs += 1
+        self.ensure_flush_ticks()
         self.engine.at(t + self.service.cpu_dispatch_us,
                        self._ev_read, lba, n_blocks, cb, tenant, t)
 
@@ -213,6 +221,38 @@ class HandlerPipeline:
             self.counters["segment_state"] += 1
             self.array.maybe_gc()
             self.counters["cleaning"] += 1
+
+    # -- self-rescheduling timeout flush (service tier / open-ended traffic) --
+
+    def _busy(self) -> bool:
+        """Work outstanding anywhere: dispatched requests still pending, or
+        an attached front end (busy_hook) holding queued/scheduled work."""
+        return self._open_reqs > 0 or bool(self.busy_hook and self.busy_hook())
+
+    def ensure_flush_ticks(self) -> None:
+        """Arm the periodic timeout-flush tick (idempotent).
+
+        Unlike the fixed tick train ``replay`` used to pre-schedule over the
+        arrival span, this tick *re-arms itself* for as long as the pipeline
+        is busy -- including work that only exists in an attached service
+        tier's submission queues, where no write has been dispatched yet.
+        Without it, a dispatcher that drains its submission queue mid-stripe
+        would leave the partial stripe staged forever: no further write
+        arrives to fill it and no flush event exists to pad it.  The chain
+        stops (and can be re-armed by the next submission) once the system
+        is fully idle, so an idle timed pipeline schedules no events."""
+        if self.engine is None or not self.flush_interval_us:
+            return
+        if self._flush_tick_armed:
+            return
+        self._flush_tick_armed = True
+        self.engine.after(self.flush_interval_us, self._ev_flush_tick_auto)
+
+    def _ev_flush_tick_auto(self) -> None:
+        self._flush_tick_armed = False
+        self._ev_flush_tick()
+        if self._busy():
+            self.ensure_flush_ticks()
 
     # -- array hooks (timed mode) -------------------------------------------
 
@@ -292,11 +332,9 @@ class HandlerPipeline:
                 self.submit_write(r.lba, data, at=r.t_us, tenant=r.tenant)
             else:
                 self.submit_read(r.lba, r.n_blocks, at=r.t_us, tenant=r.tenant)
-        if self.flush_interval_us:
-            t = self.flush_interval_us
-            while t <= t_end + self.flush_interval_us:
-                self.engine.at(t, self._ev_flush_tick)
-                t += self.flush_interval_us
+        # the tick re-arms itself while requests are outstanding, so traffic
+        # that queues past the last arrival still gets timeout flushes
+        self.ensure_flush_ticks()
         self.drain()
         return self.recorder
 
@@ -319,6 +357,8 @@ class HandlerPipeline:
         rec.samples.clear()
         rec.stage_sums.clear()
         rec.stage_counts.clear()
+        rec.tenant_stage_sums.clear()
+        rec.tenant_stage_counts.clear()
         rec.notes.clear()
         rec.note_counts.clear()
         self.counters = {s: 0 for s in self.STAGES}

@@ -1,0 +1,47 @@
+"""Async block-device service front end over the timed engine (PR 6).
+
+Layers:
+
+* :mod:`repro.service.request`    -- ``IoRequest`` futures + the shared
+  :class:`CompletionQueue` (the ``zns_raid_write/read(..., cb_fn, args)``
+  surface of the real system);
+* :mod:`repro.service.qos`        -- QoS classes (strict priority, EDF
+  deadlines, token-bucket shaping, queue-depth caps) and admission state;
+* :mod:`repro.service.dispatcher` -- per-tenant submission queues and the
+  dispatcher actor enforcing the in-flight window and the QoS policy,
+  plus :class:`ClosedLoopClient` for fixed-window (queue-depth sweep)
+  load generation;
+* :mod:`repro.service.scenario`   -- canned multi-tenant scenarios
+  (checkpoint-traffic-under-serving, read QD sweeps) shared by the
+  benchmarks, examples, and ``repro.launch.serve`` (imported lazily --
+  pulling the scenario module drags in the checkpoint/jax stack).
+
+Acks fire at the device-completion times the discrete-event engine
+computes, never at Python-call return; see DESIGN.md §11.
+"""
+from repro.service.dispatcher import BlockDeviceService, ClosedLoopClient, Tenant
+from repro.service.qos import LATENCY, THROUGHPUT, QosClass, TokenBucket
+from repro.service.request import (
+    DONE,
+    INFLIGHT,
+    QUEUED,
+    REJECTED,
+    CompletionQueue,
+    IoRequest,
+)
+
+__all__ = [
+    "BlockDeviceService",
+    "ClosedLoopClient",
+    "CompletionQueue",
+    "DONE",
+    "INFLIGHT",
+    "IoRequest",
+    "LATENCY",
+    "QUEUED",
+    "QosClass",
+    "REJECTED",
+    "THROUGHPUT",
+    "Tenant",
+    "TokenBucket",
+]

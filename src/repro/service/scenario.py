@@ -1,0 +1,194 @@
+"""Canned multi-tenant scenarios over the block service.
+
+Two scenarios shared by the benchmarks, the examples, and the serving
+launcher (imported lazily by callers -- this module drags in the
+checkpoint/jax stack):
+
+* :func:`read_qd_sweep` -- closed-loop read throughput vs offered queue
+  depth: the saturation curve of the ZNS array (channel parallelism fills
+  up, then the curve flattens);
+* :func:`checkpoint_under_serving` -- the ML-cell workload: many simulated
+  training jobs stream erasure-coded checkpoint saves through the service
+  as throughput-class tenants while latency-class serving reads run
+  alongside.  Run it once with ``policy="qos"`` and once with
+  ``policy="fifo"`` to measure what admission control buys the serving
+  tenant's tail.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.checkpoint.zapraid_ckpt import (
+    MANIFEST_LBAS,
+    CheckpointConfig,
+    CheckpointEngine,
+)
+from repro.core.handlers import HandlerPipeline
+from repro.service.dispatcher import BlockDeviceService, ClosedLoopClient
+from repro.service.qos import LATENCY, QosClass
+from repro.sim.workload import TenantSpec, synthetic
+
+
+def _precondition_region(pipe, lo: int, n_blocks: int, *, seed: int,
+                         extent: int = 256) -> None:
+    """Install valid media under ``[lo, lo + n_blocks)`` outside the
+    measured timeline, so read traffic hits mapped, reconstructable data."""
+    bb = pipe.array.zns_cfg.block_bytes
+    rng = np.random.default_rng(seed)
+
+    def gen():
+        lba = lo
+        end = lo + n_blocks
+        while lba < end:
+            n = min(extent, end - lba)
+            yield lba, rng.integers(0, 256, (n, bb), dtype=np.uint8)
+            lba += n
+
+    pipe.precondition(gen())
+
+
+def read_qd_sweep(
+    qds=(1, 2, 4, 8, 16, 32),
+    *,
+    n_ops: int = 192,
+    logical_blocks: int = 4096,
+    seed: int = 0,
+) -> list[dict]:
+    """Closed-loop single-tenant read sweep; one fresh array per depth.
+
+    Returns one row per queue depth: ``{"qd", "virtual_iops",
+    "p50_us", "p99_us"}`` -- virtual-time figures, deterministic for a
+    given seed."""
+    cfg = CheckpointConfig(zone_cap_blocks=2048, n_zones=32)
+    rows = []
+    for qd in qds:
+        pipe = HandlerPipeline.build_timed(
+            cfg.zap_cfg(logical_blocks), cfg.zns_cfg(), seed=seed,
+            flush_interval_us=200.0,
+        )
+        _precondition_region(pipe, 0, logical_blocks, seed=seed + 1)
+        svc = BlockDeviceService(pipe, max_inflight=max(64, qd), policy="fifo")
+        svc.register("sweep", QosClass("sweep"))
+        reqs = synthetic(
+            TenantSpec(name="sweep", kind="uniform", n_ops=n_ops,
+                       read_frac=1.0, arrival="closed", window=qd, seed=seed),
+            logical_blocks,
+        )
+        client = ClosedLoopClient(svc, "sweep", reqs, window=qd)
+        client.start(0.0)
+        svc.drain()
+        assert client.done() and client.rejected == 0
+        span = svc.recorder.span_us()
+        pct = svc.recorder.percentiles(op="R")
+        rows.append({
+            "qd": qd,
+            "virtual_iops": n_ops / span * 1e6 if span > 0 else 0.0,
+            "p50_us": pct["p50"],
+            "p99_us": pct["p99"],
+        })
+    return rows
+
+
+def checkpoint_under_serving(
+    *,
+    policy: str = "qos",
+    n_jobs: int = 4,
+    n_saves: int = 2,
+    ckpt_interval_us: float = 2_000.0,
+    leaf_blocks: int = 4,
+    n_leaves: int = 12,
+    serve_ops: int = 500,
+    serve_rate_iops: float = 40_000.0,
+    max_inflight: int = 8,
+    seed: int = 0,
+    restore_check: bool = True,
+) -> dict:
+    """Checkpoint traffic at scale under latency-sensitive serving.
+
+    ``n_jobs`` training jobs share one timed array, each confined to its
+    own LBA window, and stream ``n_saves`` erasure-coded checkpoints
+    through the service as throughput-class tenants (class-wide in-flight
+    cap = half the window, so checkpoint bursts can never occupy every
+    dispatcher slot).  Meanwhile an open-loop Poisson stream of
+    latency-class reads models serving traffic against a preconditioned
+    region.  Returns per-tenant latency/figures plus the save tickets'
+    resolution times; with ``restore_check`` the last checkpoint of job 0
+    is also restored through the service and verified bit-identical.
+    """
+    cfg = CheckpointConfig(zone_cap_blocks=2048, n_zones=32)
+    serve_blocks = 1024
+    job_span = MANIFEST_LBAS + 512
+    logical_blocks = serve_blocks + n_jobs * job_span
+
+    pipe = HandlerPipeline.build_timed(
+        cfg.zap_cfg(logical_blocks), cfg.zns_cfg(), seed=seed,
+        flush_interval_us=200.0,
+    )
+    engine = pipe.engine
+    _precondition_region(pipe, 0, serve_blocks, seed=seed + 7)
+
+    svc = BlockDeviceService(pipe, max_inflight=max_inflight, policy=policy)
+    svc.register("serve", LATENCY)
+    ckpt_qos = QosClass("ckpt", priority=2, max_inflight=max(2, max_inflight // 2))
+    engines = []
+    for j in range(n_jobs):
+        svc.register(f"job{j}", ckpt_qos)
+        engines.append(CheckpointEngine(
+            cfg, logical_blocks, array=pipe.array,
+            lba_base=serve_blocks + j * job_span, lba_span=job_span,
+        ))
+
+    # training state per job: a few leaves, each ``leaf_blocks`` blocks
+    rng = np.random.default_rng(seed + 11)
+    n_f32 = leaf_blocks * cfg.block_bytes // 4
+    states = [
+        {f"layer{i}": rng.standard_normal(n_f32).astype(np.float32)
+         for i in range(n_leaves)}
+        for _ in range(n_jobs)
+    ]
+
+    # serving traffic: open-loop latency-class reads
+    for r in synthetic(
+        TenantSpec(name="serve", kind="hotspot", n_ops=serve_ops,
+                   rate_iops=serve_rate_iops, read_frac=1.0, seed=seed),
+        serve_blocks,
+    ):
+        svc.submit_read("serve", r.lba, r.n_blocks, at=r.t_us)
+
+    # checkpoint traffic: every job saves on a fixed cadence (staggered)
+    tickets = []
+    for j in range(n_jobs):
+        for i in range(n_saves):
+            t = 100.0 + j * (ckpt_interval_us / n_jobs) + i * ckpt_interval_us
+            engine.at(t, lambda j=j, i=i: tickets.append(
+                engines[j].save_async(i, states[j], service=svc,
+                                      tenant=f"job{j}")
+            ))
+    svc.drain()
+    assert len(tickets) == n_jobs * n_saves
+    assert all(t.done for t in tickets)
+
+    restore_ok = None
+    if restore_check:
+        rt = engines[0].restore_async(
+            n_saves - 1, states[0], service=svc, tenant="job0"
+        )
+        svc.drain()
+        assert rt.done
+        restore_ok = all(
+            np.array_equal(np.asarray(rt.state[k]), states[0][k])
+            for k in states[0]
+        )
+
+    serve = svc.recorder.percentiles(op="R", tenant="serve")
+    saves = np.array([t.latency_us for t in tickets])
+    return {
+        "policy": policy,
+        "serve_p50_us": serve["p50"],
+        "serve_p99_us": serve["p99"],
+        "serve_n": serve["n"],
+        "ckpt_save_mean_us": float(saves.mean()),
+        "ckpt_save_max_us": float(saves.max()),
+        "restore_ok": restore_ok,
+        "summary": svc.summary(),
+    }

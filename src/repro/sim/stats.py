@@ -38,6 +38,11 @@ class LatencyRecorder:
         self.samples: list[Sample] = []
         self.stage_sums: dict[str, float] = defaultdict(float)
         self.stage_counts: dict[str, int] = defaultdict(int)
+        # per-tenant breakdown of the same stages, keyed (tenant, stage):
+        # the service tier uses it to attribute queue-wait vs service time
+        # per client (QoS accounting)
+        self.tenant_stage_sums: dict[tuple[str, str], float] = defaultdict(float)
+        self.tenant_stage_counts: dict[tuple[str, str], int] = defaultdict(int)
         self.notes: dict[str, float] = defaultdict(float)
         self.note_counts: dict[str, int] = defaultdict(int)
 
@@ -55,6 +60,8 @@ class LatencyRecorder:
         for k, v in (stages or {}).items():
             self.stage_sums[k] += v
             self.stage_counts[k] += 1
+            self.tenant_stage_sums[(tenant, k)] += v
+            self.tenant_stage_counts[(tenant, k)] += 1
 
     def note(self, key: str, value_us: float) -> None:
         """Accumulate an engine-level delay (e.g. group-barrier waits)."""
@@ -79,10 +86,17 @@ class LatencyRecorder:
             out[name] = float(q)
         return out
 
-    def stage_means(self) -> dict[str, float]:
+    def stage_means(self, tenant: Optional[str] = None) -> dict[str, float]:
+        """Mean per-stage delay, optionally restricted to one tenant."""
+        if tenant is None:
+            return {
+                k: self.stage_sums[k] / max(1, self.stage_counts[k])
+                for k in sorted(self.stage_sums)
+            }
         return {
-            k: self.stage_sums[k] / max(1, self.stage_counts[k])
-            for k in sorted(self.stage_sums)
+            k: self.tenant_stage_sums[(t, k)] / max(1, self.tenant_stage_counts[(t, k)])
+            for t, k in sorted(self.tenant_stage_sums)
+            if t == tenant
         }
 
     def span_us(self) -> float:
@@ -107,7 +121,10 @@ class LatencyRecorder:
         out = {
             "ops": {op: self.percentiles(op=op) for op in ("R", "W")},
             "tenants": {
-                t: {op: self.percentiles(op=op, tenant=t) for op in ("R", "W")}
+                t: {
+                    **{op: self.percentiles(op=op, tenant=t) for op in ("R", "W")},
+                    "stage_means_us": self.stage_means(tenant=t),
+                }
                 for t in tenants
             },
             "stage_means_us": self.stage_means(),

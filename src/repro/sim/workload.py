@@ -142,7 +142,21 @@ def _addresses(
 
 @dataclasses.dataclass
 class TenantSpec:
-    """One client of a multi-tenant workload."""
+    """One client of a multi-tenant workload.
+
+    ``arrival`` selects the arrival process:
+
+    * ``"open"``   -- open-loop: timestamps are drawn up front (Poisson /
+      bursty) and requests are fired at those instants regardless of how
+      the device keeps up -- queueing delay is *observed*;
+    * ``"closed"`` -- closed-loop: a fixed ``window`` of requests is kept
+      outstanding and the next one is submitted only when a previous one
+      completes (plus ``think_time_us``).  Submission times therefore
+      depend on completions, so ``synthetic`` emits the op/address stream
+      with ``t_us = 0`` and a driver with completion callbacks -- see
+      :class:`repro.service.ClosedLoopClient` -- assigns the real times.
+      This is the knob queue-depth sweeps are expressed with.
+    """
 
     name: str
     kind: str = "uniform"        # seq | uniform | hotspot | zipf
@@ -156,17 +170,29 @@ class TenantSpec:
     hot_frac: float = 0.1
     hot_prob: float = 0.8
     seed: int = 0
+    arrival: str = "open"        # open | closed
+    window: int = 4              # closed-loop outstanding-request window
+    think_time_us: float = 0.0   # closed-loop delay completion -> next submit
 
 
 def synthetic(spec: TenantSpec, logical_blocks: int) -> list[Request]:
-    """Generate one tenant's open-loop request stream."""
+    """Generate one tenant's request stream.
+
+    Open-loop specs carry real arrival timestamps; closed-loop specs carry
+    the deterministic op/address sequence with ``t_us = 0`` (the submission
+    instants are decided at run time by the closed-loop driver)."""
+    if spec.arrival not in ("open", "closed"):
+        raise ValueError(f"unknown arrival mode: {spec.arrival}")
     rng = np.random.default_rng(spec.seed + 0x5EED)
-    t = _arrivals(
-        rng, spec.n_ops, spec.rate_iops,
-        burst_factor=spec.burst_factor,
-        burst_on_frac=spec.burst_on_frac,
-        burst_period_us=spec.burst_period_us,
-    )
+    if spec.arrival == "closed":
+        t = np.zeros(spec.n_ops)
+    else:
+        t = _arrivals(
+            rng, spec.n_ops, spec.rate_iops,
+            burst_factor=spec.burst_factor,
+            burst_on_frac=spec.burst_on_frac,
+            burst_period_us=spec.burst_period_us,
+        )
     addr = _addresses(
         rng, spec.kind, spec.n_ops, logical_blocks, spec.n_blocks,
         hot_frac=spec.hot_frac, hot_prob=spec.hot_prob,
@@ -183,6 +209,11 @@ def multi_tenant(specs: list[TenantSpec], logical_blocks: int) -> list[Request]:
     """Merge tenant streams into one arrival-ordered workload."""
     reqs: list[Request] = []
     for spec in specs:
+        if spec.arrival != "open":
+            raise ValueError(
+                f"tenant {spec.name!r}: closed-loop streams have no arrival "
+                "times to merge on; drive them with repro.service.ClosedLoopClient"
+            )
         reqs.extend(synthetic(spec, logical_blocks))
     reqs.sort(key=lambda r: (r.t_us, r.tenant))
     return reqs
