@@ -1,7 +1,7 @@
 PYTHONPATH := src
 PY := PYTHONPATH=$(PYTHONPATH) python
 
-.PHONY: test test-fast bench bench-quick bench-check serve-demo
+.PHONY: test test-fast bench bench-quick bench-check serve-demo cache-demo
 
 # Tier-1 verify: the whole suite, stop on first failure.
 test:
@@ -16,17 +16,22 @@ bench:
 	$(PY) -m benchmarks.run
 
 # Cheap subset with small shapes for CI time budgets; rewrites the committed
-# BENCH_PR6.json baseline (the quick set carries the perf acceptance figures).
+# BENCH_PR7.json baseline (the quick set carries the perf acceptance figures).
 bench-quick:
 	$(PY) -m benchmarks.run --quick
 
 # CI regression gate: rerun the quick set, fail on >25% wall-clock regression
 # against the committed baseline (writes no JSON).
 bench-check:
-	$(PY) -m benchmarks.run --check BENCH_PR6.json
+	$(PY) -m benchmarks.run --check BENCH_PR7.json
 
 # Checkpoint-traffic-under-serving demo: many training jobs stream saves
 # through the async block service while latency-class reads run alongside;
 # prints the per-tenant QoS-vs-FIFO tail comparison.
 serve-demo:
 	$(PY) -m repro.launch.serve --storage-sim --policy both
+
+# Warm-cache degraded-read demo: the ZNS cache tier absorbing the hot set
+# after a drive failure; prints the warm-vs-cold p50/p99 comparison.
+cache-demo:
+	$(PY) examples/warm_cache_degraded.py

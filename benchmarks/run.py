@@ -13,9 +13,9 @@ each benchmark name to its measured ``us_per_call`` and ``derived`` figure,
 so the perf trajectory can be tracked across PRs.  Each command maps to its
 own file so no sweep clobbers another's baseline: ``--quick`` (small shapes,
 cheap subset, carries the perf acceptance figures) writes the committed
-``BENCH_PR6.json``; full runs write ``BENCH_FULL.json``; ``--only`` sweeps
+``BENCH_PR7.json``; full runs write ``BENCH_FULL.json``; ``--only`` sweeps
 skip the JSON unless ``--json PATH`` is given explicitly.  ``--check
-BENCH_PR6.json`` is the CI regression gate: it reruns the quick set and
+BENCH_PR7.json`` is the CI regression gate: it reruns the quick set and
 fails on a >25% wall-clock regression against the committed baseline
 (virtual-time ``service/*`` rows gate unscaled -- they are deterministic).
 
@@ -738,6 +738,62 @@ def bench_service():
          f"qos_cuts_serve_read_p99_{gain:.1f}x_vs_fifo")
 
 
+# ------------------------------------------------------- ZNS cache tier
+
+def bench_cache():
+    """ZNS cache tier (PR 7): hit-rate vs read tail under zipf / hotspot /
+    bursty address streams on a healthy array, and the headline figure --
+    degraded-read p99 with a warm cache after a drive failure vs cold.
+    All rows are virtual-time figures (deterministic for a given seed)."""
+    from repro.cache import CacheConfig, ZnsCacheTier
+    from repro.checkpoint.zapraid_ckpt import CheckpointConfig
+    from repro.core.handlers import HandlerPipeline
+    from repro.service.scenario import _precondition_region, degraded_read_cache
+    from repro.sim import TenantSpec
+    from repro.sim.workload import synthetic
+
+    n_ops = 300 if QUICK else 600
+    logical = 2048
+
+    def healthy(kind, burst_factor=1.0):
+        cfg = CheckpointConfig(zone_cap_blocks=2048, n_zones=32)
+        pipe = HandlerPipeline.build_timed(
+            cfg.zap_cfg(logical), cfg.zns_cfg(), seed=7,
+            flush_interval_us=200.0,
+        )
+        cache = ZnsCacheTier(
+            CacheConfig(n_zones=8, zone_cap_blocks=32,
+                        block_bytes=cfg.block_bytes),
+            logical,
+        )
+        pipe.attach_cache(cache)
+        _precondition_region(pipe, 0, logical, seed=8)
+        rec = pipe.replay(synthetic(
+            TenantSpec(name="c", kind=kind, n_ops=n_ops, rate_iops=40_000,
+                       read_frac=1.0, burst_factor=burst_factor, seed=9),
+            logical,
+        ))
+        return rec.percentiles(op="R"), cache.stats.hit_rate()
+
+    for kind, bf, label in (("zipf", 1.0, "zipf"), ("hotspot", 1.0, "hotspot"),
+                            ("hotspot", 3.0, "bursty")):
+        p, hr = healthy(kind, burst_factor=bf)
+        emit(f"cache/hit_{label}_p99", p["p99"],
+             f"hit_rate={hr:.2f}_p50={p['p50']:.1f}us")
+
+    # the degraded pair keeps the full stream length even under --quick: a
+    # shorter stream's working set fits the cache entirely and the warm row
+    # degenerates to 100% hits at sub-gate latency
+    cold = degraded_read_cache(warm=False, n_ops=600)
+    warm = degraded_read_cache(warm=True, n_ops=600)
+    emit("cache/degraded_cold_p99", cold["p99_us"],
+         f"hit_rate={cold['hit_rate']:.2f}_n={cold['n']}")
+    emit("cache/degraded_warm_p99", warm["p99_us"],
+         f"hit_rate={warm['hit_rate']:.2f}_bypasses={warm['cache_bypasses']}")
+    emit("cache/degraded_warm_gain", 0.0,
+         f"p99_{cold['p99_us'] / max(warm['p99_us'], 1e-9):.1f}x_lower_warm")
+
+
 # ------------------------------------------------------------ straggler
 
 def bench_straggler():
@@ -761,7 +817,7 @@ ALL = [
     bench_l2p_offload, bench_trace, bench_latency_qos, bench_e2e_write,
     bench_read_batched, bench_gc_pipeline, bench_recovery_pipeline,
     bench_kernels_batched, bench_kernels, bench_checkpoint, bench_service,
-    bench_straggler,
+    bench_cache, bench_straggler,
 ]
 
 # --quick runs the cheap subset (each well under a minute on CPU)
@@ -769,7 +825,7 @@ QUICK_SET = [
     bench_zns_primitives, bench_group_size, bench_raid_schemes,
     bench_trace, bench_latency_qos, bench_e2e_write, bench_read_batched,
     bench_gc_pipeline, bench_recovery_pipeline, bench_kernels_batched,
-    bench_service, bench_straggler,
+    bench_service, bench_cache, bench_straggler,
 ]
 
 
@@ -803,6 +859,7 @@ CHECK_PREFIXES = (
 # excluded: it *growing* is an improvement, which the gate would misread.
 CHECK_NOSCALE_PREFIXES = (
     "service/qd_sweep_qd", "service/ckpt_vs_serve_p99_",
+    "cache/hit_", "cache/degraded_",
 )
 CHECK_SLACK = 1.25   # fail when us_per_call grows >25% over the baseline
 CHECK_MIN_US = 5.0   # skip sub-5us rows: timer/scheduler noise swamps them
@@ -875,7 +932,7 @@ def main() -> None:
                     help="small shapes / cheap subset for CI time budgets")
     ap.add_argument("--json", default=None,
                     help="machine-readable output path ('' to disable). "
-                         "Defaults: --quick -> BENCH_PR6.json (the committed "
+                         "Defaults: --quick -> BENCH_PR7.json (the committed "
                          "baseline: the quick set carries the perf acceptance "
                          "figures), full -> BENCH_FULL.json, "
                          "--only -> disabled; each command maps to one file "
@@ -894,7 +951,7 @@ def main() -> None:
         if args.only:
             json_path = ""
         else:
-            json_path = "BENCH_PR6.json" if args.quick else "BENCH_FULL.json"
+            json_path = "BENCH_PR7.json" if args.quick else "BENCH_FULL.json"
     print("name,us_per_call,derived")
     for fn in (QUICK_SET if QUICK else ALL):
         if args.only and args.only not in fn.__name__:

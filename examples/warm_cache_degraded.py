@@ -1,0 +1,43 @@
+"""Warm-cache degraded reads: the PR-7 ZNS cache tier end to end.
+
+What a read cache buys a log-structured RAID array when a drive dies:
+
+1. build a timed ZapRAID pipeline and attach the device-resident
+   :class:`~repro.cache.ZnsCacheTier` (zone-structured arena, count-min
+   admission, zone-granular CLOCK eviction, cache-device latency on the
+   virtual clock);
+2. warm the cache with a hotspot read stream outside the measured
+   timeline, then fail a drive;
+3. replay the same latency-class read stream through the async block
+   service twice -- once cold, once warm -- and compare p50/p99: cold,
+   every read on the failed drive fans out into k survivor reads and
+   queues; warm, the hot set is absorbed at cache latency (bypassing the
+   dispatcher window entirely) and the residual misses see idle drives.
+
+Run: PYTHONPATH=src python examples/warm_cache_degraded.py
+(also `make cache-demo`)
+"""
+from repro.service.scenario import degraded_read_cache
+
+
+def show(row: dict) -> None:
+    mode = "warm" if row["warm"] else "cold"
+    print(f"  {mode:5s} p50={row['p50_us']:8.1f}us  p99={row['p99_us']:8.1f}us  "
+          f"hit_rate={row['hit_rate']:.2f}  "
+          f"queue_bypasses={row['cache_bypasses']}")
+
+
+def main() -> None:
+    print("degraded reads, one drive down, hotspot stream "
+          "(virtual-time figures):")
+    cold = degraded_read_cache(warm=False)
+    warm = degraded_read_cache(warm=True)
+    show(cold)
+    show(warm)
+    print(f"  warm cache cuts degraded p99 "
+          f"{cold['p99_us'] / warm['p99_us']:.1f}x "
+          f"(p50 {cold['p50_us'] / warm['p50_us']:.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

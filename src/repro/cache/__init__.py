@@ -1,0 +1,21 @@
+"""ZNS-aware zero-copy cache tier in front of the ZapRAID array.
+
+See :mod:`repro.cache.tier` for the design; DESIGN.md §12 for the writeup.
+"""
+from repro.cache.sketch import FrequencySketch
+from repro.cache.tier import (
+    CacheConfig,
+    CacheStats,
+    ZnsCacheTier,
+    meta_key,
+    user_key,
+)
+
+__all__ = [
+    "CacheConfig",
+    "CacheStats",
+    "FrequencySketch",
+    "ZnsCacheTier",
+    "meta_key",
+    "user_key",
+]

@@ -88,6 +88,11 @@ class ZapRaidConfig:
     l2p_memory_limit_entries: Optional[int] = None
     # GC
     gc_free_segments_low: int = 1  # trigger GC when free segments/drive < this
+    # Reserved-zone escrow: zones per drive only GC restage may consume.
+    # Foreground segment opens refuse to dip below this floor, so a GC pass
+    # at very high utilization always has somewhere to restage survivors
+    # (fixes the zone-exhaustion deadlock).  0 keeps historical behavior.
+    gc_reserved_zones: int = 0
     # datapath
     use_pallas: bool = False
     interpret: bool = True
@@ -137,6 +142,12 @@ class Stats:
     h2d_bytes: int = 0
     d2h_copies: int = 0
     d2h_bytes: int = 0
+    # cache tier (repro.cache), all zero when no cache is attached
+    cache_hits: int = 0
+    cache_misses: int = 0
+    l2p_cache_hits: int = 0      # mapping-block fault-ins served by the cache
+    l2p_cache_misses: int = 0    # ... that had to read media
+    l2p_cache_offloads: int = 0  # CLOCK evictions spilled into the cache
 
     def write_amp(self) -> float:
         if self.host_blocks_written == 0:
@@ -352,7 +363,11 @@ class ZapRAIDArray:
         self._rr_large = 0
         self._pending_meta: list[int] = []  # gids awaiting mapping-block write
         self._meta_staging: dict[int, np.ndarray] = {}  # gid -> entries in flight
-        self._meta_queued_ts: dict[int, int] = {}
+        # In-flight image count per gid: pending-queue entries plus staged
+        # mapping blocks not yet committed.  ``_meta_staging`` is dropped when
+        # the count returns to zero (every queued image durable) -- stripe
+        # commit re-stamps block timestamps, so a ts match cannot detect this.
+        self._meta_refs: dict[int, int] = {}
         self._buffered: dict[int, tuple] = {}  # lba -> (stripe, slot), uncommitted
         self.mapping_table: dict[int, int] = {}  # gid -> pba of mapping block
 
@@ -379,6 +394,11 @@ class ZapRAIDArray:
         # those zones must route through reconstruction until the rebuild
         # actor reaches them.  Empty outside a paced rebuild.
         self._rebuild_pending: set[tuple[int, int]] = set()
+        # Optional cache tier (repro.cache.ZnsCacheTier) -- see attach_cache.
+        self.cache = None
+        # True while gc_once() is restaging survivors: segment opens may dip
+        # into the gc_reserved_zones escrow only then.
+        self._gc_active = False
 
         if not _recovering:
             self._open_initial_segments()
@@ -395,7 +415,15 @@ class ZapRAIDArray:
         )
 
     def free_segment_count(self) -> int:
-        return min(len(fz) for fz in self.free_zones)
+        """Free segments available to *foreground* writes per drive.
+
+        The GC escrow (``cfg.gc_reserved_zones``) is invisible here unless a
+        GC pass is in flight, so GC-trigger watermarks fire before the
+        escrow is all that is left."""
+        free = min(len(fz) for fz in self.free_zones)
+        if not self._gc_active:
+            free -= self.cfg.gc_reserved_zones
+        return max(free, 0)
 
     def has_staged(self) -> bool:
         """True while foreground work sits in volatile staging: buffered
@@ -408,6 +436,30 @@ class ZapRAIDArray:
             bool(self._buffered)
             or self._pending_group is not None
             or bool(self._pending_meta)
+        )
+
+    # ------------------------------------------------------------- cache tier
+
+    def attach_cache(self, cache) -> None:
+        """Install a read/write cache tier (``repro.cache.ZnsCacheTier``).
+
+        The cache indexes *logical* keys (LBA for user blocks, mapping-group
+        id for offloaded L2P blocks), so GC relocation and drive rebuild --
+        which move physical copies only -- need no cache maintenance.  The
+        coherence points are commit-time refresh on overwrite and
+        mapping-block commit (both inside the timestamp guards), plus
+        read-miss fills.  When the L2P offloads, CLOCK evictions spill the
+        evicted group image into the cache so later fault-ins skip media."""
+        self.cache = cache
+        if self.l2p.offload:
+            self.l2p.evict_listener = self._on_l2p_evict
+
+    def _on_l2p_evict(self, gid: int, entries: np.ndarray) -> None:
+        if self.cache is None:
+            return
+        self.stats.l2p_cache_offloads += 1
+        self.cache.fill_one(
+            (gid << 1) | 1, self._serialize_mapping(entries), force=True
         )
 
     # -------------------------------------------------------- segment opening
@@ -431,8 +483,12 @@ class ZapRAIDArray:
                 )
 
     def _open_segment(self, seg_class: int, chunk_blocks: int, group_size: int) -> int:
+        # Foreground opens stop short of the escrowed zones; only GC restage
+        # (self._gc_active) may consume them, so a GC pass at full utilization
+        # always has a destination segment (the deadlock fix, ROADMAP item 4).
+        floor = 0 if self._gc_active else self.cfg.gc_reserved_zones
         for fz in self.free_zones:
-            if not fz:
+            if len(fz) <= floor:
                 raise RuntimeError("out of free zones; GC required")
         zone_ids = tuple(fz.pop() for fz in self.free_zones)
         s, _ = self._layout_for(chunk_blocks)
@@ -543,6 +599,10 @@ class ZapRAIDArray:
             self._in_flight[seg_class] = stripe
         if lba >= 0:
             self._buffered[lba] = (stripe, stripe.fill)
+        if meta_gid >= 0:
+            # staged-in-stripe mapping-block image holds a staging ref until
+            # its stripe commits (see _meta_unref)
+            self._meta_refs[meta_gid] = self._meta_refs.get(meta_gid, 0) + 1
         stripe.add(lba, block, ts, meta_gid)
         if stripe.full:
             self._dispatch_stripe(seg_class)
@@ -573,6 +633,11 @@ class ZapRAIDArray:
                 self._in_flight[seg_class] = stripe
             take = min(stripe.capacity - stripe.fill, n - i)
             base = stripe.fill
+            if meta_gids is not None:
+                for g in meta_gids[i : i + take]:
+                    if g >= 0:
+                        g = int(g)
+                        self._meta_refs[g] = self._meta_refs.get(g, 0) + 1
             stripe.add_many(
                 lbas[i : i + take], blocks[i : i + take], ts,
                 None if meta_gids is None else meta_gids[i : i + take],
@@ -1048,6 +1113,7 @@ class ZapRAIDArray:
                 pba = pack_pba(info.seg_id, drive_idx, blk_off)
                 didx = blk_off - info.data_start()
                 if gid >= 0:  # mapping block
+                    self._meta_unref(gid)
                     if ts < self._gid_ts.get(gid, 0):
                         continue  # a newer mapping block already committed
                     self._gid_ts[gid] = ts
@@ -1055,10 +1121,14 @@ class ZapRAIDArray:
                     if old != int(NO_PBA):
                         self._invalidate(old)
                     self.mapping_table[gid] = pba
-                    if self._meta_queued_ts.get(gid) == ts:
-                        self._meta_staging.pop(gid, None)  # durable now
                     rec.valid[drive_idx, didx] = True
                     rec.valid_count += 1
+                    if self.cache is not None:
+                        # the committed bytes are what a future fault-in
+                        # would read from media: keep the cache copy warm
+                        self.cache.fill_one(
+                            (gid << 1) | 1, built["data"][role, b], force=True
+                        )
                 elif lba >= 0:  # user block
                     if ts < int(self._lba_ts[lba]):
                         continue  # stale at birth: a newer write already won
@@ -1069,6 +1139,8 @@ class ZapRAIDArray:
                     self.l2p.set(lba, pba)
                     rec.valid[drive_idx, didx] = True
                     rec.valid_count += 1
+                    if self.cache is not None:  # overwrite coherence point
+                        self.cache.refresh_one(lba << 1, built["data"][role, b])
         if self.commit_listener is not None:
             self.commit_listener(info, built, per_drive_off)
 
@@ -1106,8 +1178,12 @@ class ZapRAIDArray:
         lba_f = grp["lbas_all"].ravel()
         ts_f = grp["ts_all"].ravel()
         gid_f = grp["gids_all"].ravel()
+        if self.cache is not None:
+            bb = self.zns_cfg.block_bytes
+            data_f = grp["data_all"].reshape(-1, bb)  # aligns with lba_f/gid_f
         for i in np.flatnonzero(gid_f >= 0):  # mapping blocks
             gid, ts = int(gid_f[i]), int(ts_f[i])
+            self._meta_unref(gid)
             if ts < self._gid_ts.get(gid, 0):
                 continue  # a newer mapping block already committed
             self._gid_ts[gid] = ts
@@ -1115,10 +1191,10 @@ class ZapRAIDArray:
             if old != int(NO_PBA):
                 self._invalidate(old)
             self.mapping_table[gid] = int(pba_f[i])
-            if self._meta_queued_ts.get(gid) == ts:
-                self._meta_staging.pop(gid, None)  # durable now
             rec.valid[drive_f[i], didx_f[i]] = True
             rec.valid_count += 1
+            if self.cache is not None:
+                self.cache.fill_one((gid << 1) | 1, data_f[i], force=True)
         user_idx = np.flatnonzero(lba_f >= 0)
         if self.l2p.offload:
             for i in user_idx:
@@ -1132,6 +1208,8 @@ class ZapRAIDArray:
                 self.l2p.set(lba, int(pba_f[i]))
                 rec.valid[drive_f[i], didx_f[i]] = True
                 rec.valid_count += 1
+                if self.cache is not None:  # overwrite coherence point
+                    self.cache.refresh_one(lba << 1, data_f[i])
         elif user_idx.size:
             lba_u = lba_f[user_idx]
             ok = ts_f[user_idx].astype(np.uint64) >= self._lba_ts[lba_u]
@@ -1143,6 +1221,8 @@ class ZapRAIDArray:
             self.l2p.set_many(lba_u, pba_f[ui])
             rec.valid[drive_f[ui], didx_f[ui]] = True
             rec.valid_count += int(ui.size)
+            if self.cache is not None and ui.size:  # overwrite coherence point
+                self.cache.refresh_many(lba_u << 1, data_f[ui])
         if self.commit_listener is not None:
             for s_i in range(s_count):
                 built = {
@@ -1252,13 +1332,31 @@ class ZapRAIDArray:
         """Vectorized multi-block read: one L2P gather, then one numpy gather
         per (segment, drive) the blocks land on; blocks on failed drives are
         collected and reconstructed in one fused decode per surviving-role
-        set (the batched degraded-read path)."""
+        set (the batched degraded-read path).
+
+        With a cache tier attached this is a read-through layer: one batched
+        ``lookup_many`` filters the hits (served at cache-device latency),
+        only the misses touch the L2P and the drives, and every mapped miss
+        -- including reconstructed degraded blocks -- is offered back for
+        admission."""
         out = np.zeros((lbas.shape[0], self.zns_cfg.block_bytes), dtype=np.uint8)
+        idx = np.arange(lbas.shape[0], dtype=np.int64)
+        if self.cache is not None:
+            hit, rows = self.cache.lookup_many(lbas << 1)
+            n_hit = rows.shape[0]
+            if n_hit:
+                out[idx[hit]] = rows
+                self.stats.cache_hits += n_hit
+            self.stats.cache_misses += int(lbas.size) - n_hit
+            idx = idx[~hit]
+            if idx.size == 0:
+                return out
+            lbas = lbas[idx]
         pbas = self.l2p.get_many(lbas)
-        mapped = np.nonzero(pbas != int(NO_PBA))[0]
+        mapped = idx[pbas != int(NO_PBA)]
         if mapped.size == 0:
             return out
-        segs, drives, offs = unpack_pba_many(pbas[mapped])
+        segs, drives, offs = unpack_pba_many(pbas[pbas != int(NO_PBA)])
         faulted: list[tuple[int, int, np.ndarray, np.ndarray]] = []
         for key in {(int(s), int(d)) for s, d in zip(segs, drives)}:
             seg_id, drive_idx = key
@@ -1281,13 +1379,26 @@ class ZapRAIDArray:
             chunks, _ = self._reconstruct_chunks(rec, drive_idx, chunk_idxs)
             out[idxs] = chunks[inv, didx % c]
             self.stats.degraded_reads += int(idxs.size)
+        if self.cache is not None:
+            # Offer every mapped miss (reconstructed blocks included) for
+            # admission: a warm cache absorbs reconstruction traffic.
+            self.cache.fill_many(lbas[pbas != int(NO_PBA)] << 1, out[mapped])
         return out
 
     def _read_block(self, lba: int) -> np.ndarray:
+        if self.cache is not None:
+            row = self.cache.lookup_one(lba << 1)
+            if row is not None:
+                self.stats.cache_hits += 1
+                return row.copy()
+            self.stats.cache_misses += 1
         pba = self.l2p.get(lba)
         if pba == int(NO_PBA):
             return np.zeros(self.zns_cfg.block_bytes, dtype=np.uint8)
-        return self._read_pba(pba)
+        out = self._read_pba(pba)
+        if self.cache is not None:
+            self.cache.fill_one(lba << 1, out)
+        return out
 
     def _read_pba(self, pba: int) -> np.ndarray:
         seg_id, drive_idx, off = unpack_pba(pba)
@@ -1508,6 +1619,19 @@ class ZapRAIDArray:
         # this group must see the staged entries, not the stale on-SSD block.
         self._meta_staging[gid] = entries.copy()
         self._pending_meta.append(gid)
+        self._meta_refs[gid] = self._meta_refs.get(gid, 0) + 1
+
+    def _meta_unref(self, gid: int) -> None:
+        """One queued image of ``gid`` became durable; drop the host-side
+        staging copy once no in-flight image remains."""
+        refs = self._meta_refs.get(gid, 0) - 1
+        if refs > 0:
+            self._meta_refs[gid] = refs
+        elif refs == 0:
+            del self._meta_refs[gid]
+            self._meta_staging.pop(gid, None)  # durable now
+        # refs < 0: a GC-restaged copy of an already-durable block -- no
+        # staging existed for it, nothing to do.
 
     def _drain_meta(self) -> None:
         while self._pending_meta:
@@ -1522,11 +1646,16 @@ class ZapRAIDArray:
             else:
                 entries = self._meta_staging.get(gid)
             if entries is None:
-                continue  # superseded (faulted back in and re-evicted)
+                # superseded (faulted back in and re-evicted): release the
+                # pending entry's ref without writing anything
+                self._meta_unref(gid)
+                continue
             block = self._serialize_mapping(entries)
             ts = self._now()
-            self._meta_queued_ts[gid] = ts
+            # _append_block takes the in-stripe ref before we release the
+            # pending one, so refs never dip to zero across the handoff
             self._append_block(self._classify(1), -1, block, ts, meta_gid=gid)
+            self._meta_unref(gid)
             self.stats.meta_blocks_written += 1
 
     def _serialize_mapping(self, entries: np.ndarray) -> np.ndarray:
@@ -1560,7 +1689,17 @@ class ZapRAIDArray:
         pba = self.mapping_table.get(gid)
         if pba is None:
             return None
+        if self.cache is not None:
+            # Mapping-table cache: fault-ins beyond the CLOCK resident
+            # budget are served from the cache tier instead of media.
+            row = self.cache.lookup_one((gid << 1) | 1)
+            if row is not None:
+                self.stats.l2p_cache_hits += 1
+                return self._deserialize_mapping(row)
+            self.stats.l2p_cache_misses += 1
         block = self._read_pba(pba)
+        if self.cache is not None:
+            self.cache.fill_one((gid << 1) | 1, block, force=True)
         return self._deserialize_mapping(block)
 
     # -------------------------------------------------------------------- GC
@@ -1708,6 +1847,9 @@ class ZapRAIDArray:
         if rec is None:
             return False
         self.stats.gc_runs += 1
+        # Restage segment opens may consume the reserved-zone escrow while
+        # this pass runs (cleared before both exits below).
+        self._gc_active = True
         info = rec.info
         if self.cfg.batched:
             u_lbas, u_blocks, m_gids, m_blocks = self._gc_collect_batched(rec)
@@ -1779,6 +1921,7 @@ class ZapRAIDArray:
             self.free_zones[drive_idx].append(info.zone_ids[drive_idx])
             self._rebuild_pending.discard((info.seg_id, drive_idx))
         del self.segments[info.seg_id]
+        self._gc_active = False
         return True
 
     # -------------------------------------------------------------- drive fail

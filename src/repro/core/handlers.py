@@ -135,6 +135,17 @@ class HandlerPipeline:
         return cls(array, engine=engine, recorder=recorder,
                    flush_interval_us=flush_interval_us)
 
+    def attach_cache(self, cache) -> None:
+        """Attach a ``repro.cache.ZnsCacheTier`` to the array; in timed mode
+        a :class:`~repro.sim.device.TimedCacheDevice` is created on the
+        engine so hits complete at cache-device latency on the virtual
+        clock (their ``touch_io`` feeds the same ``io_watermark`` that
+        prices drive reads)."""
+        if self.engine is not None and cache.timed_dev is None:
+            from repro.sim.device import TimedCacheDevice
+            cache.timed_dev = TimedCacheDevice(self.engine)
+        self.array.attach_cache(cache)
+
     # -- submission (application-facing, like the bdev layer) ---------------
 
     def submit_write(self, lba: int, data: np.ndarray, cb=None, *,
@@ -352,6 +363,11 @@ class HandlerPipeline:
         self.array.flush()
         for d in self.array.drives:
             d.reset_timing()
+        cache = self.array.cache
+        if cache is not None:
+            # warm contents survive; timing and hit counters restart clean
+            cache.reset_timing()
+            cache.stats.reset()
         self._barriers.clear()
         rec = self.recorder
         rec.samples.clear()

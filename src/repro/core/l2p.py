@@ -80,6 +80,10 @@ class L2PTable:
         )
         self._write_cb = write_mapping_block
         self._read_cb = read_mapping_block
+        # Fires on every CLOCK eviction (clean or dirty) with the evicted
+        # group image -- the array's cache tier uses it to keep offloaded
+        # mapping blocks warm beyond the resident budget.
+        self.evict_listener: Optional[Callable[[int, np.ndarray], None]] = None
         if not self.offload:
             self.flat = np.full(n_blocks, NO_PBA, dtype=np.int64)
         else:
@@ -147,6 +151,8 @@ class L2PTable:
         entries = self.resident.pop(gid)
         self.resident_mask[gid] = False
         self.evictions += 1
+        if self.evict_listener is not None:
+            self.evict_listener(gid, entries)
         if gid in self.dirty:
             self.dirty.discard(gid)
             if self._write_cb is not None:

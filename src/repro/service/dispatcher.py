@@ -82,6 +82,7 @@ class BlockDeviceService:
         max_inflight: int = 32,
         policy: str = "qos",
         recorder=None,
+        cache_bypass: bool = True,
     ):
         assert pipe.engine is not None, "the service requires a timed pipeline"
         assert policy in ("qos", "fifo"), policy
@@ -89,6 +90,12 @@ class BlockDeviceService:
         self.engine = pipe.engine
         self.policy = policy
         self.max_inflight = max_inflight
+        # Reads fully resident in the array's cache tier skip the submission
+        # queue and the in-flight window: a cache hit needs no device queue
+        # slot, so latency-class tenants see hits without queueing behind
+        # checkpoint traffic.  Only active when a cache is attached.
+        self.cache_bypass = cache_bypass
+        self.cache_bypasses = 0
         self.tenants: dict[str, Tenant] = {}
         self.cq = CompletionQueue()
         if recorder is None:
@@ -155,6 +162,18 @@ class BlockDeviceService:
             if req.cb_fn:
                 req.cb_fn(req)
             return
+        cache = self.pipe.array.cache if self.cache_bypass else None
+        if (
+            req.op == "R"
+            and cache is not None
+            and cache.contains_run(req.lba, req.n_blocks)
+        ):
+            # full cache hit: dispatch immediately, outside the window
+            ten.accepted += 1
+            req.bypass = True
+            self.cache_bypasses += 1
+            self._dispatch(req)
+            return
         ten.accepted += 1
         ten.queue.append(req)
         self._pump()
@@ -207,9 +226,10 @@ class BlockDeviceService:
         ten = self.tenants[req.tenant]
         req.status = INFLIGHT
         req.t_dispatch = self.engine.now
-        ten.inflight += 1
-        self.inflight += 1
-        self._class_inflight[ten.qos.name] += 1
+        if not req.bypass:  # cache-hit reads don't hold a window slot
+            ten.inflight += 1
+            self.inflight += 1
+            self._class_inflight[ten.qos.name] += 1
         if req.op == "W":
             self.pipe.submit_write(
                 req.lba, req.data, tenant=req.tenant,
@@ -226,10 +246,11 @@ class BlockDeviceService:
         req.status = DONE
         req.t_done = self.engine.now
         req.result = result
-        ten.inflight -= 1
+        if not req.bypass:
+            ten.inflight -= 1
+            self.inflight -= 1
+            self._class_inflight[ten.qos.name] -= 1
         ten.completed += 1
-        self.inflight -= 1
-        self._class_inflight[ten.qos.name] -= 1
         self._live -= 1
         self.recorder.record(
             req.tenant, req.op, req.t_submit, req.t_done,
@@ -270,6 +291,7 @@ class BlockDeviceService:
         return {
             "policy": self.policy,
             "max_inflight": self.max_inflight,
+            "cache_bypasses": self.cache_bypasses,
             "tenants": {
                 name: {
                     "qos": ten.qos.name,

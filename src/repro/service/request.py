@@ -45,6 +45,8 @@ class IoRequest:
     deadline: float = math.inf                # absolute; EDF key within class
     status: str = QUEUED
     result: Any = None                        # read payload once DONE
+    bypass: bool = False                      # served via the cache tier fast
+                                              # path, outside the QoS window
 
     def done(self) -> bool:
         return self.status in (DONE, REJECTED)

@@ -230,6 +230,53 @@ class TimedDrive(SimZnsDrive):
         return self.chunk_done.get((zone, offset))
 
 
+@dataclasses.dataclass
+class CacheServiceModel:
+    """Service model for the cache tier: CMB/DRAM-class block reads.
+
+    Deterministic (no jitter) so warm-cache scenarios replay bit- and
+    time-identically — the cache benchmark rows gate unscaled in CI."""
+
+    read_us: float = 3.0          # per-command service time at the cache tier
+    cmd_max_blocks: int = 16      # a batch of hits splits into commands
+    n_channels: int = 8
+
+
+class TimedCacheDevice:
+    """Virtual-time model of the cache device in front of the array.
+
+    Mirrors ``TimedDrive``'s channel booking: a batch of ``n_blocks``
+    hits splits into commands of at most ``cmd_max_blocks`` fanned over
+    the free channels, each taking a flat ``read_us``.  Completions are
+    reported through ``engine.touch_io`` so the handler pipeline's
+    ``io_watermark`` convention prices cache hits with zero plumbing."""
+
+    def __init__(self, engine: Engine, model: Optional[CacheServiceModel] = None):
+        self.engine = engine
+        self.model = model or CacheServiceModel()
+        self.reset_timing()
+
+    def reset_timing(self) -> None:
+        self.channels = [self.engine.now] * self.model.n_channels
+        self.busy_us = 0.0
+
+    def book_read(self, n_blocks: int, floor: float) -> float:
+        max_b = max(1, self.model.cmd_max_blocks)
+        done = floor
+        remaining = n_blocks
+        while remaining > 0:
+            nb = min(remaining, max_b)
+            i = int(np.argmin(self.channels))
+            start = max(floor, self.channels[i])
+            t = start + self.model.read_us
+            self.channels[i] = t
+            self.busy_us += self.model.read_us
+            done = max(done, t)
+            remaining -= nb
+        self.engine.touch_io(done)
+        return done
+
+
 def make_timed_drives(
     n_drives: int,
     cfg: ZnsConfig,
