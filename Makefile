@@ -1,7 +1,7 @@
 PYTHONPATH := src
 PY := PYTHONPATH=$(PYTHONPATH) python
 
-.PHONY: test test-fast bench bench-quick bench-check serve-demo cache-demo
+.PHONY: test test-fast bench bench-quick bench-check serve-demo cache-demo obs-demo
 
 # Tier-1 verify: the whole suite, stop on first failure.
 test:
@@ -16,14 +16,14 @@ bench:
 	$(PY) -m benchmarks.run
 
 # Cheap subset with small shapes for CI time budgets; rewrites the committed
-# BENCH_PR7.json baseline (the quick set carries the perf acceptance figures).
+# BENCH_PR8.json baseline (the quick set carries the perf acceptance figures).
 bench-quick:
 	$(PY) -m benchmarks.run --quick
 
 # CI regression gate: rerun the quick set, fail on >25% wall-clock regression
 # against the committed baseline (writes no JSON).
 bench-check:
-	$(PY) -m benchmarks.run --check BENCH_PR7.json
+	$(PY) -m benchmarks.run --check BENCH_PR8.json
 
 # Checkpoint-traffic-under-serving demo: many training jobs stream saves
 # through the async block service while latency-class reads run alongside;
@@ -35,3 +35,10 @@ serve-demo:
 # after a drive failure; prints the warm-vs-cold p50/p99 comparison.
 cache-demo:
 	$(PY) examples/warm_cache_degraded.py
+
+# Observability demo: checkpoint-under-serving with span tracing, the
+# metrics sampler, and the SLO admission controller; writes a
+# Perfetto-loadable out/trace.json plus out/metrics.json (schema-validated)
+# and prints the static-vs-SLO serving-p99 comparison.
+obs-demo:
+	$(PY) examples/trace_and_metrics.py

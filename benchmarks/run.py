@@ -13,9 +13,9 @@ each benchmark name to its measured ``us_per_call`` and ``derived`` figure,
 so the perf trajectory can be tracked across PRs.  Each command maps to its
 own file so no sweep clobbers another's baseline: ``--quick`` (small shapes,
 cheap subset, carries the perf acceptance figures) writes the committed
-``BENCH_PR7.json``; full runs write ``BENCH_FULL.json``; ``--only`` sweeps
+``BENCH_PR8.json``; full runs write ``BENCH_FULL.json``; ``--only`` sweeps
 skip the JSON unless ``--json PATH`` is given explicitly.  ``--check
-BENCH_PR7.json`` is the CI regression gate: it reruns the quick set and
+BENCH_PR8.json`` is the CI regression gate: it reruns the quick set and
 fails on a >25% wall-clock regression against the committed baseline
 (virtual-time ``service/*`` rows gate unscaled -- they are deterministic).
 
@@ -794,6 +794,48 @@ def bench_cache():
          f"p99_{cold['p99_us'] / max(warm['p99_us'], 1e-9):.1f}x_lower_warm")
 
 
+# -------------------------------------------------------- observability
+
+def bench_obs():
+    """Observability layer (PR 8): the observe-only gate -- the qd-sweep
+    with the full tracing+metrics stack attached must match the plain run
+    to within 5% virtual IOPS (it is in fact bit-identical: spans are
+    recorded off bookings the engine already computes) -- and the SLO
+    monitor's dynamic-admission recovery of serving p99 under checkpoint
+    pressure.  All rows are virtual-time figures, deterministic per seed."""
+    from repro.service.scenario import checkpoint_under_serving, read_qd_sweep
+
+    n_ops = 96 if QUICK else 192
+    qds = (4, 16)
+    plain = read_qd_sweep(qds=qds, n_ops=n_ops)
+    traced = read_qd_sweep(qds=qds, n_ops=n_ops, obs=True)
+    for p, t in zip(plain, traced):
+        delta = abs(t["virtual_iops"] - p["virtual_iops"]) \
+            / max(p["virtual_iops"], 1e-9)
+        assert delta < 0.05, (
+            f"tracing perturbed the timeline at qd{p['qd']}: "
+            f"{t['virtual_iops']:.0f} vs {p['virtual_iops']:.0f} iops")
+        emit(f"obs/trace_overhead_qd{p['qd']}", t["p99_us"],
+             f"iops_delta={delta * 100:.2f}pct_of_{p['virtual_iops']:.0f}")
+
+    slo_kw = dict(window_us=1500.0, interval_us=250.0, min_samples=8)
+    static = checkpoint_under_serving(policy="qos", seed=0,
+                                      restore_check=False)
+    dyn = checkpoint_under_serving(
+        policy="qos", seed=0, restore_check=False,
+        slo_objective_us=150.0, slo_kwargs=slo_kw,
+    )
+    s = dyn["slo"]
+    emit("obs/slo_admission_static", static["serve_p99_us"],
+         f"ckpt_save_max={static['ckpt_save_max_us']:.0f}us")
+    emit("obs/slo_admission_slo", dyn["serve_p99_us"],
+         f"cap_{s['default_cap']}to{s['min_cap']}_"
+         f"shrinks={s['n_shrinks']}_restores={s['n_restores']}")
+    gain = static["serve_p99_us"] / max(dyn["serve_p99_us"], 1e-9)
+    emit("obs/slo_admission_gain", 0.0,
+         f"slo_recovers_serve_p99_{gain:.2f}x_vs_static")
+
+
 # ------------------------------------------------------------ straggler
 
 def bench_straggler():
@@ -817,7 +859,7 @@ ALL = [
     bench_l2p_offload, bench_trace, bench_latency_qos, bench_e2e_write,
     bench_read_batched, bench_gc_pipeline, bench_recovery_pipeline,
     bench_kernels_batched, bench_kernels, bench_checkpoint, bench_service,
-    bench_cache, bench_straggler,
+    bench_cache, bench_obs, bench_straggler,
 ]
 
 # --quick runs the cheap subset (each well under a minute on CPU)
@@ -825,7 +867,7 @@ QUICK_SET = [
     bench_zns_primitives, bench_group_size, bench_raid_schemes,
     bench_trace, bench_latency_qos, bench_e2e_write, bench_read_batched,
     bench_gc_pipeline, bench_recovery_pipeline, bench_kernels_batched,
-    bench_service, bench_cache, bench_straggler,
+    bench_service, bench_cache, bench_obs, bench_straggler,
 ]
 
 
@@ -860,6 +902,8 @@ CHECK_PREFIXES = (
 CHECK_NOSCALE_PREFIXES = (
     "service/qd_sweep_qd", "service/ckpt_vs_serve_p99_",
     "cache/hit_", "cache/degraded_",
+    "obs/trace_overhead_qd", "obs/slo_admission_static",
+    "obs/slo_admission_slo",
 )
 CHECK_SLACK = 1.25   # fail when us_per_call grows >25% over the baseline
 CHECK_MIN_US = 5.0   # skip sub-5us rows: timer/scheduler noise swamps them
@@ -932,7 +976,7 @@ def main() -> None:
                     help="small shapes / cheap subset for CI time budgets")
     ap.add_argument("--json", default=None,
                     help="machine-readable output path ('' to disable). "
-                         "Defaults: --quick -> BENCH_PR7.json (the committed "
+                         "Defaults: --quick -> BENCH_PR8.json (the committed "
                          "baseline: the quick set carries the perf acceptance "
                          "figures), full -> BENCH_FULL.json, "
                          "--only -> disabled; each command maps to one file "
@@ -951,7 +995,7 @@ def main() -> None:
         if args.only:
             json_path = ""
         else:
-            json_path = "BENCH_PR7.json" if args.quick else "BENCH_FULL.json"
+            json_path = "BENCH_PR8.json" if args.quick else "BENCH_FULL.json"
     print("name,us_per_call,derived")
     for fn in (QUICK_SET if QUICK else ALL):
         if args.only and args.only not in fn.__name__:

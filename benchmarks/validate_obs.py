@@ -1,0 +1,56 @@
+"""CI validator for the obs-demo artifacts.
+
+``make obs-demo`` writes ``out/trace.json`` (Chrome/Perfetto
+``trace_event`` JSON) and ``out/metrics.json`` (metric time-series).
+This script re-validates both files against the same schema checkers the
+unit tests use -- trace-event field/nesting invariants, monotone
+timestamps, non-decreasing counters -- plus a few artifact-level checks
+(non-trivial event counts, the request/resource span families and the SLO
+cap gauge actually present), so CI fails if the demo ever starts emitting
+JSON a viewer would load but render wrong.
+
+Run: PYTHONPATH=src python -m benchmarks.validate_obs [out_dir]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.obs import validate_metrics_series, validate_trace_events
+
+
+def main(out_dir: str = "out") -> int:
+    trace_path = os.path.join(out_dir, "trace.json")
+    metrics_path = os.path.join(out_dir, "metrics.json")
+
+    with open(trace_path) as f:
+        doc = json.load(f)
+    events = doc["traceEvents"]
+    validate_trace_events(events)
+    phs = {e["ph"] for e in events}
+    assert {"b", "e", "X", "M"} <= phs, f"span families missing: {phs}"
+    assert len(events) > 100, f"suspiciously small trace ({len(events)})"
+    names = {e["name"] for e in events}
+    for required in ("io.request", "device.service", "zone_append"):
+        assert required in names, f"missing span kind {required!r}"
+    print(f"# {trace_path}: {len(events)} events OK "
+          f"({len(names)} span kinds)")
+
+    with open(metrics_path) as f:
+        doc = json.load(f)
+    validate_metrics_series(doc)
+    series = doc["series"]
+    assert len(series) > 10, f"suspiciously short series ({len(series)})"
+    last = series[-1]
+    for gauge in ("service/inflight", "class/ckpt/cap",
+                  "array/gc_reserved_zones"):
+        assert gauge in last["gauges"], f"missing gauge {gauge!r}"
+    assert last["counters"].get("array/stripes_committed", 0) > 0
+    print(f"# {metrics_path}: {len(series)} samples OK "
+          f"({len(last['counters'])} counters, {len(last['gauges'])} gauges)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(*sys.argv[1:]))

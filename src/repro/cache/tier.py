@@ -138,6 +138,10 @@ class ZnsCacheTier:
         )
         self.stats = CacheStats()
         self.timed_dev = timed_dev
+        # Observability hook (repro.obs via repro.core.handlers): called as
+        # ``obs_event(name, **args)`` on lookups and zone resets.  None (the
+        # default) keeps the batched paths at one attribute test.
+        self.obs_event = None
 
     # ------------------------------------------------------------- lookup
 
@@ -154,6 +158,9 @@ class ZnsCacheTier:
         n_hit = int(np.count_nonzero(hit))
         self.stats.hits += n_hit
         self.stats.misses += int(keys.size) - n_hit
+        if self.obs_event is not None:
+            self.obs_event("cache.lookup", hits=n_hit,
+                           misses=int(keys.size) - n_hit)
         if n_hit:
             hs = slots[hit]
             self.ref[hs] = 1
@@ -172,10 +179,14 @@ class ZnsCacheTier:
         if slot < 0:
             self.stats.misses += 1
             self.sketch.add(np.array([key], dtype=np.int64))
+            if self.obs_event is not None:
+                self.obs_event("cache.lookup", hits=0, misses=1)
             return None
         self.stats.hits += 1
         self.ref[slot] = 1
         self._book(1)
+        if self.obs_event is not None:
+            self.obs_event("cache.lookup", hits=1, misses=0)
         return self.data_u8[slot]
 
     def contains_many(self, keys: np.ndarray) -> np.ndarray:
@@ -301,6 +312,8 @@ class ZnsCacheTier:
         # stay protected through the next reset.
         self.ref[:] = 0
         self.stats.zone_resets += 1
+        if self.obs_event is not None:
+            self.obs_event("cache.zone_reset", zone=z, evicted=int(livek.size))
 
     # ---------------------------------------------------------- coherence
 

@@ -91,7 +91,9 @@ class ZapRaidConfig:
     # Reserved-zone escrow: zones per drive only GC restage may consume.
     # Foreground segment opens refuse to dip below this floor, so a GC pass
     # at very high utilization always has somewhere to restage survivors
-    # (fixes the zone-exhaustion deadlock).  0 keeps historical behavior.
+    # (fixes the zone-exhaustion deadlock).  Left at 0, the escrow
+    # auto-sizes from group geometry on near-full arrays -- see
+    # ZapRAIDArray.reserved_zones().
     gc_reserved_zones: int = 0
     # datapath
     use_pallas: bool = False
@@ -349,6 +351,11 @@ class ZapRAIDArray:
         # engine's accounting so latency stats stay honest about host-side
         # codec stalls (virtual time is unaffected: the encode is host work).
         self.encode_listener = None
+        # Observability hook (repro.obs via repro.core.handlers): called as
+        # ``obs_event(name, **args)`` at instrumentation points the array
+        # alone can see -- degraded decodes, GC pass begin/end.  None (the
+        # default) keeps every fast path at one attribute test.
+        self.obs_event = None
 
         # zone allocation: per-drive free zone list (LIFO)
         self.free_zones: list[list[int]] = [
@@ -414,15 +421,49 @@ class ZapRAIDArray:
             self.zns_cfg.zone_cap_blocks, chunk_blocks, self.zns_cfg.block_bytes
         )
 
+    def reserved_zones(self) -> int:
+        """Effective GC escrow: zones/drive foreground opens must leave.
+
+        An explicit ``cfg.gc_reserved_zones`` always wins.  Left at 0, the
+        escrow *auto-sizes from group geometry* once the array runs
+        near-full: when the scarcest drive is down to its last few free
+        zones (within ``gc_free_segments_low + 1`` of the auto reserve),
+        one restage destination per open segment class is reserved so a GC
+        pass at high utilization always has somewhere to restage survivors
+        (ROADMAP "smaller known issues").  Roomy arrays see an escrow of
+        0 -- historical behavior, bit-identical.
+
+        Auto-sizing needs a live GC watermark: with
+        ``gc_free_segments_low == 0`` nothing would clean proactively
+        before the floor binds mid-seal, so the escrow would starve
+        foreground instead of protecting GC -- such configs (manual-GC
+        benches, aging harnesses) keep escrow 0.  It also needs real
+        zone headroom: on capacity-tight geometries (a handful of zones
+        per drive, logical span close to physical) GC's steady state can
+        sit *exactly* at the watermark, and reserving a zone there would
+        push the array below its own GC exit threshold for good -- so
+        drives with fewer than ``4 * (auto + watermark + 1)`` zones keep
+        the historical escrow-less behavior."""
+        if self.cfg.gc_reserved_zones:
+            return self.cfg.gc_reserved_zones
+        if self.cfg.gc_free_segments_low < 1:
+            return 0
+        auto = len(self.cfg.chunk_sizes())
+        headroom = auto + self.cfg.gc_free_segments_low + 1
+        if self.zns_cfg.n_zones < 4 * headroom:
+            return 0
+        free = min(len(fz) for fz in self.free_zones)
+        return auto if free <= headroom else 0
+
     def free_segment_count(self) -> int:
         """Free segments available to *foreground* writes per drive.
 
-        The GC escrow (``cfg.gc_reserved_zones``) is invisible here unless a
+        The GC escrow (``reserved_zones()``) is invisible here unless a
         GC pass is in flight, so GC-trigger watermarks fire before the
         escrow is all that is left."""
         free = min(len(fz) for fz in self.free_zones)
         if not self._gc_active:
-            free -= self.cfg.gc_reserved_zones
+            free -= self.reserved_zones()
         return max(free, 0)
 
     def has_staged(self) -> bool:
@@ -486,7 +527,7 @@ class ZapRAIDArray:
         # Foreground opens stop short of the escrowed zones; only GC restage
         # (self._gc_active) may consume them, so a GC pass at full utilization
         # always has a destination segment (the deadlock fix, ROADMAP item 4).
-        floor = 0 if self._gc_active else self.cfg.gc_reserved_zones
+        floor = 0 if self._gc_active else self.reserved_zones()
         for fz in self.free_zones:
             if len(fz) <= floor:
                 raise RuntimeError("out of free zones; GC required")
@@ -1508,6 +1549,19 @@ class ZapRAIDArray:
         surviving-role set (parity rotation yields at most ``n`` such sets).
         Returns ``(chunks (N, c, bb) uint8, oobs (N, c) OOB_DTYPE)``.
         """
+        if self.obs_event is not None:
+            self.obs_event("degraded.begin", seg_id=rec.info.seg_id,
+                           n_chunks=len(chunk_idxs),
+                           failed_drive=failed_drive)
+        try:
+            return self._reconstruct_chunks_obs(rec, failed_drive, chunk_idxs)
+        finally:
+            if self.obs_event is not None:
+                self.obs_event("degraded.end", seg_id=rec.info.seg_id)
+
+    def _reconstruct_chunks_obs(self, rec, failed_drive, chunk_idxs):
+        """Body of ``_reconstruct_chunks`` (split so the obs hook can
+        bracket the survivor gathers + fused decode with begin/end)."""
         info = rec.info
         k, m, c = self.scheme.k, self.scheme.m, info.chunk_blocks
         bb = self.zns_cfg.block_bytes
@@ -1706,7 +1760,13 @@ class ZapRAIDArray:
 
     def maybe_gc(self) -> None:
         while self.free_segment_count() < self.cfg.gc_free_segments_low:
+            before = self.free_segment_count()
             if not self.gc_once():
+                break
+            if self.free_segment_count() <= before:
+                # a pass that nets no free segment cannot converge on the
+                # watermark (everything live, restage consumes what the
+                # victim frees) -- stop instead of collecting in a loop
                 break
 
     def _gc_select_victim(self) -> Optional[_SegmentRecord]:
@@ -1847,6 +1907,9 @@ class ZapRAIDArray:
         if rec is None:
             return False
         self.stats.gc_runs += 1
+        if self.obs_event is not None:
+            self.obs_event("gc.begin", seg_id=rec.info.seg_id)
+        moved0 = self.stats.gc_blocks_moved
         # Restage segment opens may consume the reserved-zone escrow while
         # this pass runs (cleared before both exits below).
         self._gc_active = True
@@ -1922,6 +1985,9 @@ class ZapRAIDArray:
             self._rebuild_pending.discard((info.seg_id, drive_idx))
         del self.segments[info.seg_id]
         self._gc_active = False
+        if self.obs_event is not None:
+            self.obs_event("gc.end", seg_id=info.seg_id,
+                           blocks_moved=self.stats.gc_blocks_moved - moved0)
         return True
 
     # -------------------------------------------------------------- drive fail

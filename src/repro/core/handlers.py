@@ -105,6 +105,10 @@ class HandlerPipeline:
             # partially filled stripes (see ensure_flush_ticks).
             self.busy_hook: Optional[Callable[[], bool]] = None
             self._flush_tick_armed = False
+            # Optional obs tracer (repro.obs) -- see attach_obs.  None keeps
+            # every hook site at a single attribute test.
+            self.tracer = None
+            self._obs_marks: dict[str, float] = {}
             array.commit_listener = self._on_stripe_commit
             array.encode_listener = self._on_group_encode
             if array.cfg.append_order == "timed":
@@ -145,6 +149,65 @@ class HandlerPipeline:
             from repro.sim.device import TimedCacheDevice
             cache.timed_dev = TimedCacheDevice(self.engine)
         self.array.attach_cache(cache)
+        if self.tracer is not None:
+            # a cache attached after attach_obs still gets instrumented
+            cache.obs_event = self._on_obs_event
+            if cache.timed_dev is not None:
+                cache.timed_dev.tracer = self.tracer
+
+    def attach_obs(self, tracer=None):
+        """Install a :class:`repro.obs.Tracer` across every layer.
+
+        Wires the tracer into the drives (per-channel command spans), the
+        cache device, and the array's ``obs_event`` hook (degraded decode,
+        GC passes, cache lookups); the pipeline itself adds commit-barrier
+        and rebuild spans.  Returns the tracer so callers can export.
+        Detach by passing the same sites ``None`` -- or simply build a
+        fresh pipeline: tracing-off pipelines never see these hooks.
+        """
+        assert self.engine is not None, "obs requires a timed pipeline"
+        if tracer is None:
+            from repro.obs import Tracer
+            tracer = Tracer(self.engine)
+        self.tracer = tracer
+        for d in self.array.drives:
+            d.tracer = tracer
+        self.array.obs_event = self._on_obs_event
+        cache = self.array.cache
+        if cache is not None:
+            cache.obs_event = self._on_obs_event
+            if cache.timed_dev is not None:
+                cache.timed_dev.tracer = tracer
+        return tracer
+
+    def _on_obs_event(self, name: str, **args) -> None:
+        """Adapter: array/cache instrumentation points -> tracer spans.
+
+        Begin/end pairs (``gc.begin``/``gc.end``, ``degraded.begin``/
+        ``degraded.end``) become spans from the begin instant to the I/O
+        watermark at the end instant -- the window the pass's device
+        bookings occupy; point events become instants on their track."""
+        tr = self.tracer
+        if tr is None:
+            return
+        eng = self.engine
+        if name.endswith(".begin"):
+            self._obs_marks[name[:-6]] = eng.now
+            return
+        if name.endswith(".end"):
+            key = name[:-4]
+            t0 = self._obs_marks.pop(key, eng.now)
+            span_name = {"gc": "gc.pass", "degraded": "degraded.decode"}.get(
+                key, key)
+            tr.span("array", span_name, t0, max(t0, eng.io_watermark, eng.now),
+                    cat="background", **args)
+            return
+        if name == "cache.lookup":
+            tr.instant("cache", name, eng.now, **args)
+        elif name == "cache.zone_reset":
+            tr.instant("cache", name, eng.now, **args)
+        else:
+            tr.instant("array", name, eng.now, **args)
 
     # -- submission (application-facing, like the bdev layer) ---------------
 
@@ -275,6 +338,10 @@ class HandlerPipeline:
         floor = max(eng.now, barrier)
         if barrier > eng.now:
             self.recorder.note("group_barrier_wait_us", barrier - eng.now)
+            if self.tracer is not None:
+                self.tracer.span("array", "stripe.commit_barrier",
+                                 eng.now, barrier, cat="commit",
+                                 seg_id=info.seg_id)
         order, group_done = plan_group_appends(
             self.array.drives, info.zone_ids, ops, info.chunk_blocks, floor
         )
@@ -378,6 +445,10 @@ class HandlerPipeline:
         rec.notes.clear()
         rec.note_counts.clear()
         self.counters = {s: 0 for s in self.STAGES}
+        if self.tracer is not None:
+            # warm-up spans are not part of the measured window
+            self.tracer.clear()
+            self._obs_marks.clear()
 
     # -- failure/rebuild/GC actors (timed mode) -----------------------------
 
@@ -406,6 +477,10 @@ class HandlerPipeline:
         mark = eng.mark_io()
         self.array.rebuild_drive(drive_idx)
         self.recorder.note("rebuild_device_us", max(0.0, eng.io_watermark - mark))
+        if self.tracer is not None:
+            self.tracer.span("array", "rebuild.full", eng.now,
+                             max(eng.now, eng.io_watermark),
+                             cat="background", drive=drive_idx)
 
     def _ev_rebuild_start(self, drive_idx: int, interval_us: float) -> None:
         arr = self.array
@@ -438,6 +513,11 @@ class HandlerPipeline:
             mark = eng.mark_io()
             arr._rebuild_segment(rec, drive_idx, scaffold)
             self.recorder.note("rebuild_device_us", max(0.0, eng.io_watermark - mark))
+            if self.tracer is not None:
+                self.tracer.span("array", "rebuild.segment", eng.now,
+                                 max(eng.now, eng.io_watermark),
+                                 cat="background", drive=drive_idx,
+                                 seg_id=seg_ids[i])
         else:
             # the segment was GC'd while pending; nothing left to rebuild
             arr._rebuild_pending.discard((seg_ids[i], drive_idx))

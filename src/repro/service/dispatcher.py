@@ -97,6 +97,13 @@ class BlockDeviceService:
         self.cache_bypass = cache_bypass
         self.cache_bypasses = 0
         self.tenants: dict[str, Tenant] = {}
+        # Dynamic per-class in-flight overrides (repro.obs.SloMonitor): the
+        # dispatcher consults this before the frozen QosClass default, so an
+        # SLO controller can shrink/restore a class's share at runtime.
+        # Empty by default -- static QoS behavior is untouched.
+        self.class_caps: dict[str, int] = {}
+        # Optional span tracer (repro.obs.Tracer); None = zero-cost no-op.
+        self.tracer = None
         self.cq = CompletionQueue()
         if recorder is None:
             from repro.sim.stats import LatencyRecorder
@@ -153,11 +160,22 @@ class BlockDeviceService:
         ten = self.tenants[req.tenant]
         req.t_submit = self.engine.now
         req.deadline = req.t_submit + ten.qos.deadline_us
+        tr = self.tracer
+        if tr is not None:
+            req.trace_id = req.seq
+            tr.req_begin(req.trace_id, "io.request", req.t_submit,
+                         tenant=req.tenant, op=req.op, lba=req.lba,
+                         n_blocks=req.n_blocks, qos=ten.qos.name)
         if ten.outstanding() >= ten.qos.queue_cap:
             # NVMe queue-full: reject at admission, complete with an error
             req.status = REJECTED
             ten.rejected += 1
             self._live -= 1
+            if tr is not None:
+                tr.req_instant(req.trace_id, "admission.reject", req.t_submit,
+                               queue_cap=ten.qos.queue_cap)
+                tr.req_end(req.trace_id, "io.request", req.t_submit,
+                           status=REJECTED)
             self.cq.push(req)
             if req.cb_fn:
                 req.cb_fn(req)
@@ -172,9 +190,13 @@ class BlockDeviceService:
             ten.accepted += 1
             req.bypass = True
             self.cache_bypasses += 1
+            if tr is not None:
+                tr.req_instant(req.trace_id, "cache.bypass", req.t_submit)
             self._dispatch(req)
             return
         ten.accepted += 1
+        if tr is not None:
+            tr.req_begin(req.trace_id, "sq.wait", req.t_submit)
         ten.queue.append(req)
         self._pump()
 
@@ -196,7 +218,7 @@ class BlockDeviceService:
         if not ten.queue:
             return False
         if self.policy == "qos":
-            cap = ten.qos.max_inflight
+            cap = self.class_caps.get(ten.qos.name, ten.qos.max_inflight)
             if cap and self._class_inflight[ten.qos.name] >= cap:
                 return False
         if ten.bucket is not None and ten.bucket.peek(now) < 1.0:
@@ -230,6 +252,16 @@ class BlockDeviceService:
             ten.inflight += 1
             self.inflight += 1
             self._class_inflight[ten.qos.name] += 1
+        tr = self.tracer
+        if tr is not None:
+            t = req.t_dispatch
+            if not req.bypass:
+                tr.req_end(req.trace_id, "sq.wait", t)
+                tr.req_instant(req.trace_id, "qos.dispatch", t,
+                               klass=ten.qos.name,
+                               class_inflight=self._class_inflight[ten.qos.name],
+                               inflight=self.inflight, window=self.max_inflight)
+            tr.req_begin(req.trace_id, "device.service", t)
         if req.op == "W":
             self.pipe.submit_write(
                 req.lba, req.data, tenant=req.tenant,
@@ -252,6 +284,11 @@ class BlockDeviceService:
             self._class_inflight[ten.qos.name] -= 1
         ten.completed += 1
         self._live -= 1
+        tr = self.tracer
+        if tr is not None:
+            tr.req_end(req.trace_id, "device.service", req.t_done)
+            tr.req_end(req.trace_id, "io.request", req.t_done,
+                       latency_us=req.latency_us, status=DONE)
         self.recorder.record(
             req.tenant, req.op, req.t_submit, req.t_done,
             stages={"queue_wait_us": req.queue_wait_us,
@@ -272,7 +309,7 @@ class BlockDeviceService:
             if not ten.queue or ten.bucket is None:
                 continue
             if self.policy == "qos":
-                cap = ten.qos.max_inflight
+                cap = self.class_caps.get(ten.qos.name, ten.qos.max_inflight)
                 if cap and self._class_inflight[ten.qos.name] >= cap:
                     continue
             t_next = min(t_next, ten.bucket.next_ready(now))

@@ -47,6 +47,8 @@ class IoRequest:
     result: Any = None                        # read payload once DONE
     bypass: bool = False                      # served via the cache tier fast
                                               # path, outside the QoS window
+    trace_id: int = -1                        # async-span id in the obs
+                                              # tracer (-1: not traced)
 
     def done(self) -> bool:
         return self.status in (DONE, REJECTED)

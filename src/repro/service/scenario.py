@@ -16,6 +16,8 @@ checkpoint/jax stack):
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import numpy as np
 
 from repro.checkpoint.zapraid_ckpt import (
@@ -53,12 +55,16 @@ def read_qd_sweep(
     n_ops: int = 192,
     logical_blocks: int = 4096,
     seed: int = 0,
+    obs: bool = False,
 ) -> list[dict]:
     """Closed-loop single-tenant read sweep; one fresh array per depth.
 
     Returns one row per queue depth: ``{"qd", "virtual_iops",
     "p50_us", "p99_us"}`` -- virtual-time figures, deterministic for a
-    given seed."""
+    given seed.  With ``obs=True`` the full observability stack (span
+    tracer on every layer + metrics sampler actor) rides along; the
+    virtual-time figures must be identical either way, which is exactly
+    what the ``obs/trace_overhead`` benchmark rows assert."""
     cfg = CheckpointConfig(zone_cap_blocks=2048, n_zones=32)
     rows = []
     for qd in qds:
@@ -68,6 +74,17 @@ def read_qd_sweep(
         )
         _precondition_region(pipe, 0, logical_blocks, seed=seed + 1)
         svc = BlockDeviceService(pipe, max_inflight=max(64, qd), policy="fifo")
+        if obs:
+            from repro.obs import (
+                MetricsRegistry, MetricsSampler, standard_collector,
+            )
+            svc.tracer = pipe.attach_obs()
+            sampler = MetricsSampler(
+                pipe.engine, MetricsRegistry(),
+                standard_collector(pipe, svc),
+                interval_us=50.0, busy_fn=lambda s=svc: s._live > 0,
+            )
+            sampler.start(0.0)
         svc.register("sweep", QosClass("sweep"))
         reqs = synthetic(
             TenantSpec(name="sweep", kind="uniform", n_ops=n_ops,
@@ -179,6 +196,10 @@ def checkpoint_under_serving(
     max_inflight: int = 8,
     seed: int = 0,
     restore_check: bool = True,
+    slo_objective_us: Optional[float] = None,
+    slo_kwargs: Optional[dict] = None,
+    tracer=None,
+    sampler_interval_us: Optional[float] = None,
 ) -> dict:
     """Checkpoint traffic at scale under latency-sensitive serving.
 
@@ -191,6 +212,13 @@ def checkpoint_under_serving(
     region.  Returns per-tenant latency/figures plus the save tickets'
     resolution times; with ``restore_check`` the last checkpoint of job 0
     is also restored through the service and verified bit-identical.
+
+    Observability options (repro.obs): ``slo_objective_us`` arms an
+    :class:`~repro.obs.SloMonitor` protecting the serving tenant's p99 by
+    dynamically shrinking/restoring the checkpoint class's in-flight share
+    (result gains an ``"slo"`` summary); ``tracer`` threads a span tracer
+    through every layer; ``sampler_interval_us`` attaches a metrics
+    sampler (result gains ``"metrics_series"``).
     """
     cfg = CheckpointConfig(zone_cap_blocks=2048, n_zones=32)
     serve_blocks = 1024
@@ -205,6 +233,29 @@ def checkpoint_under_serving(
     _precondition_region(pipe, 0, serve_blocks, seed=seed + 7)
 
     svc = BlockDeviceService(pipe, max_inflight=max_inflight, policy=policy)
+    monitor = sampler = None
+    registry = None
+    if tracer is not None:
+        pipe.attach_obs(tracer)
+        svc.tracer = tracer
+    if slo_objective_us is not None or sampler_interval_us is not None:
+        from repro.obs import MetricsRegistry
+        registry = MetricsRegistry()
+    if sampler_interval_us is not None:
+        from repro.obs import MetricsSampler, standard_collector
+        sampler = MetricsSampler(
+            engine, registry, standard_collector(pipe, svc),
+            interval_us=sampler_interval_us,
+            busy_fn=lambda: svc._live > 0,
+        )
+        sampler.start(0.0)
+    if slo_objective_us is not None:
+        from repro.obs import SloMonitor
+        monitor = SloMonitor(
+            svc, "serve", slo_objective_us, klass="ckpt",
+            registry=registry, **(slo_kwargs or {}),
+        )
+        monitor.start(0.0)
     svc.register("serve", LATENCY)
     ckpt_qos = QosClass("ckpt", priority=2, max_inflight=max(2, max_inflight // 2))
     engines = []
@@ -259,7 +310,7 @@ def checkpoint_under_serving(
 
     serve = svc.recorder.percentiles(op="R", tenant="serve")
     saves = np.array([t.latency_us for t in tickets])
-    return {
+    out = {
         "policy": policy,
         "serve_p50_us": serve["p50"],
         "serve_p99_us": serve["p99"],
@@ -269,3 +320,10 @@ def checkpoint_under_serving(
         "restore_ok": restore_ok,
         "summary": svc.summary(),
     }
+    if monitor is not None:
+        out["slo"] = monitor.summary()
+        out["slo_actions"] = monitor.actions
+    if sampler is not None:
+        out["metrics_series"] = sampler.series
+        out["sampler"] = sampler
+    return out

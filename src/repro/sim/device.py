@@ -82,6 +82,10 @@ class TimedDrive(SimZnsDrive):
         self.engine = engine
         self.service = service
         self.jitter_rng = np.random.default_rng(seed)
+        # Optional repro.obs.Tracer: every booked command emits a span on
+        # this drive's track.  None (the default) costs one attribute test.
+        self.tracer = None
+        self._trace_track = f"drive{drive_id}"
         self.reset_timing()
 
     def reset_timing(self) -> None:
@@ -117,6 +121,9 @@ class TimedDrive(SimZnsDrive):
         self._book_channel(done)
         self.busy_us += svc
         self.engine.touch_io(done)
+        if self.tracer is not None:
+            self.tracer.span(self._trace_track, "zone_write", start, done,
+                             zone=zone, n_blocks=n_blocks)
         return done
 
     def book_append(self, zone: int, n_blocks: int, floor: float) -> float:
@@ -140,6 +147,9 @@ class TimedDrive(SimZnsDrive):
         self._book_channel(done)
         self.busy_us += svc
         self.engine.touch_io(done)
+        if self.tracer is not None:
+            self.tracer.span(self._trace_track, "zone_append", start, done,
+                             zone=zone, n_blocks=n_blocks, qd=qd_now)
         return done
 
     def book_read(self, n_blocks: int, floor: float) -> float:
@@ -162,6 +172,9 @@ class TimedDrive(SimZnsDrive):
             self.busy_us += svc
             done = max(done, t)
             remaining -= nb
+            if self.tracer is not None:
+                self.tracer.span(self._trace_track, "read", start, t,
+                                 n_blocks=nb)
         self.engine.touch_io(done)
         return done
 
@@ -254,7 +267,8 @@ class TimedCacheDevice:
     def __init__(self, engine: Engine, model: Optional[CacheServiceModel] = None):
         self.engine = engine
         self.model = model or CacheServiceModel()
-        self.reset_timing()
+        self.tracer = None   # optional repro.obs.Tracer, same contract as
+        self.reset_timing()  # TimedDrive.tracer
 
     def reset_timing(self) -> None:
         self.channels = [self.engine.now] * self.model.n_channels
@@ -273,6 +287,9 @@ class TimedCacheDevice:
             self.busy_us += self.model.read_us
             done = max(done, t)
             remaining -= nb
+            if self.tracer is not None:
+                self.tracer.span("cache-dev", "cache_read", start, t,
+                                 n_blocks=nb)
         self.engine.touch_io(done)
         return done
 

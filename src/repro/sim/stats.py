@@ -76,15 +76,45 @@ class LatencyRecorder:
             if (op is None or s.op == op) and (tenant is None or s.tenant == tenant)
         ])
 
-    def percentiles(self, op: Optional[str] = None, tenant: Optional[str] = None) -> dict:
-        """{n, mean, max, p50, p95, p99, p999} over the selected samples."""
-        lat = self.latencies(op, tenant)
+    @staticmethod
+    def _reduce(lat: np.ndarray) -> dict:
+        """Percentile reduction with an explicit empty-set guard: a tenant
+        with zero samples in the selection yields ``n == 0`` and NaN
+        figures instead of falling through to ``np.percentile`` on an
+        empty array (or a KeyError at the caller)."""
         if lat.size == 0:
-            return {"n": 0}
+            out = {"n": 0, "mean": float("nan"), "max": float("nan")}
+            out.update({name: float("nan") for name in _PCT_NAMES})
+            return out
         out = {"n": int(lat.size), "mean": float(lat.mean()), "max": float(lat.max())}
         for name, q in zip(_PCT_NAMES, np.percentile(lat, PERCENTILES)):
             out[name] = float(q)
         return out
+
+    def percentiles(self, op: Optional[str] = None, tenant: Optional[str] = None) -> dict:
+        """{n, mean, max, p50, p95, p99, p999} over the selected samples."""
+        return self._reduce(self.latencies(op, tenant))
+
+    def windowed_percentiles(
+        self,
+        t_lo: float,
+        t_hi: float,
+        op: Optional[str] = None,
+        tenant: Optional[str] = None,
+    ) -> dict:
+        """Percentiles over samples *completing* in ``(t_lo, t_hi]``.
+
+        The SLO monitor's view of the world: only completions inside the
+        trailing window count, so the figure tracks current conditions
+        instead of averaging over the whole run.  Safe on empty windows
+        (``n == 0``, NaN figures)."""
+        lat = np.array([
+            s.latency_us for s in self.samples
+            if t_lo < s.t_done <= t_hi
+            and (op is None or s.op == op)
+            and (tenant is None or s.tenant == tenant)
+        ])
+        return self._reduce(lat)
 
     def stage_means(self, tenant: Optional[str] = None) -> dict[str, float]:
         """Mean per-stage delay, optionally restricted to one tenant."""
