@@ -1,7 +1,7 @@
 PYTHONPATH := src
 PY := PYTHONPATH=$(PYTHONPATH) python
 
-.PHONY: test test-fast bench bench-quick bench-check serve-demo cache-demo obs-demo
+.PHONY: test test-fast bench bench-quick bench-check serve-demo cache-demo obs-demo degraded-demo
 
 # Tier-1 verify: the whole suite, stop on first failure.
 test:
@@ -16,14 +16,14 @@ bench:
 	$(PY) -m benchmarks.run
 
 # Cheap subset with small shapes for CI time budgets; rewrites the committed
-# BENCH_PR8.json baseline (the quick set carries the perf acceptance figures).
+# BENCH_PR9.json baseline (the quick set carries the perf acceptance figures).
 bench-quick:
 	$(PY) -m benchmarks.run --quick
 
 # CI regression gate: rerun the quick set, fail on >25% wall-clock regression
 # against the committed baseline (writes no JSON).
 bench-check:
-	$(PY) -m benchmarks.run --check BENCH_PR8.json
+	$(PY) -m benchmarks.run --check BENCH_PR9.json
 
 # Checkpoint-traffic-under-serving demo: many training jobs stream saves
 # through the async block service while latency-class reads run alongside;
@@ -42,3 +42,10 @@ cache-demo:
 # and prints the static-vs-SLO serving-p99 comparison.
 obs-demo:
 	$(PY) examples/trace_and_metrics.py
+
+# Always-writable degraded-array demo: fault injection kills a drive
+# mid-write-stream, survivor-width stripe groups keep the array writable,
+# and the paced rebuild re-widens them; prints the p50/p99 comparison and
+# verifies the data round trip.
+degraded-demo:
+	$(PY) examples/degraded_writes.py

@@ -1,0 +1,107 @@
+"""Degraded-write benchmark: the always-writable array (DESIGN.md §14).
+
+Replays one open-loop write load on the timed pipeline in three array
+states and reports virtual-time (ZN540-calibrated device model) latency
+percentiles, so the cost of survivor-width commits and the re-widening
+rebuild become tracked figures:
+
+* ``degraded/write_p99_healthy``  -- full-width commits, all drives up;
+* ``degraded/write_p99_degraded`` -- one drive failed: the same load lands
+  on survivor-width stripe groups (k-1 data + m parity on the healthy
+  drives), with degraded decodes for reads-modify paths that touch
+  full-width history;
+* ``degraded/rewiden_rebuild_us`` -- device time booked by the paced
+  replace-and-rebuild actor *including* the final re-widening pass that
+  relocates survivor-width groups back onto the full drive set;
+* ``degraded/write_p99_rebuilt``  -- the load replayed after the rebuild:
+  the tail returns to (near) the healthy figure.
+
+All rows are virtual-time and deterministic, so the ``--check`` gate
+compares them unscaled (no machine-speed rescale).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def _shift(load, t0: float):
+    """Re-base a request stream's arrival times onto the current virtual
+    clock: replays on a pipe whose engine already advanced (fail-over,
+    rebuild) would otherwise submit every op in the past and book the
+    artificial backlog as latency."""
+    return [dataclasses.replace(r, t_us=r.t_us + t0) for r in load]
+
+
+def _make_pipe(seed: int):
+    from repro.core.array import ZapRaidConfig
+    from repro.core.handlers import HandlerPipeline
+    from repro.core.zns import ZnsConfig
+
+    cfg = ZapRaidConfig(scheme="raid5", n_drives=4, group_size=8,
+                        chunk_blocks=1, logical_blocks=256,
+                        gc_free_segments_low=1)
+    zns = ZnsConfig(n_zones=16, zone_cap_blocks=64, block_bytes=256)
+    pipe = HandlerPipeline.build_timed(cfg, zns, seed=seed,
+                                       flush_interval_us=200.0)
+    rng = np.random.default_rng(seed)
+    pipe.precondition(
+        (lba, rng.integers(0, 256, (1, 256), dtype=np.uint8))
+        for lba in range(256)
+    )
+    return pipe
+
+
+def _write_load(n_ops: int):
+    from repro.sim import TenantSpec, multi_tenant
+
+    # ~50k IOPS of uniform overwrites: fast enough that group commits queue
+    # behind the append channels, so width changes move the measured tail
+    return multi_tenant([
+        TenantSpec(name="writer", kind="uniform", n_ops=n_ops,
+                   rate_iops=50_000, read_frac=0.0, seed=71),
+    ], logical_blocks=256)
+
+
+def run_degraded_write(emit, quick: bool) -> None:
+    from repro.sim import LatencyRecorder
+
+    n_ops = 300 if quick else 1000
+    load = _write_load(n_ops)
+
+    healthy = _make_pipe(seed=7).replay(load)
+    h_w = healthy.percentiles(op="W")
+    emit("degraded/write_p99_healthy", h_w["p99"],
+         f"n={h_w['n']}_p50={h_w['p50']:.1f}us")
+
+    pipe = _make_pipe(seed=7)
+    pipe.array.fail_drive(1)
+    degraded = pipe.replay(_shift(load, pipe.engine.now))
+    d_w = degraded.percentiles(op="W")
+    emit("degraded/write_p99_degraded", d_w["p99"],
+         f"p50={d_w['p50']:.1f}us_ratio="
+         f"{d_w['p99'] / max(h_w['p99'], 1e-9):.2f}x_vs_healthy")
+
+    # paced replace-and-rebuild on the same (now mixed-width) array: the
+    # rebuild_device_us note totals reconstruction + re-widening traffic
+    before = degraded.notes.get("rebuild_device_us", 0.0)
+    t0 = pipe.engine.now
+    narrow = sum(
+        1 for r in pipe.array.segments.values()
+        if len(r.info.drive_ids) < pipe.array.cfg.n_drives
+    )
+    pipe.schedule_rebuild(1, at=pipe.engine.now + 10.0, interval_us=20.0)
+    pipe.drain()
+    rebuild_us = degraded.notes.get("rebuild_device_us", 0.0) - before
+    emit("degraded/rewiden_rebuild_us", rebuild_us,
+         f"virtual_elapsed={pipe.engine.now - t0:.0f}us"
+         f"_narrow_segments_relocated={narrow}")
+
+    # after the re-widening rebuild the tail returns to the healthy figure
+    pipe.recorder = LatencyRecorder()
+    rebuilt = pipe.replay(_shift(load, pipe.engine.now))
+    r_w = rebuilt.percentiles(op="W")
+    emit("degraded/write_p99_rebuilt", r_w["p99"],
+         f"p50={r_w['p50']:.1f}us_ratio="
+         f"{r_w['p99'] / max(h_w['p99'], 1e-9):.2f}x_vs_healthy")

@@ -13,9 +13,9 @@ each benchmark name to its measured ``us_per_call`` and ``derived`` figure,
 so the perf trajectory can be tracked across PRs.  Each command maps to its
 own file so no sweep clobbers another's baseline: ``--quick`` (small shapes,
 cheap subset, carries the perf acceptance figures) writes the committed
-``BENCH_PR8.json``; full runs write ``BENCH_FULL.json``; ``--only`` sweeps
+``BENCH_PR9.json``; full runs write ``BENCH_FULL.json``; ``--only`` sweeps
 skip the JSON unless ``--json PATH`` is given explicitly.  ``--check
-BENCH_PR8.json`` is the CI regression gate: it reruns the quick set and
+BENCH_PR9.json`` is the CI regression gate: it reruns the quick set and
 fails on a >25% wall-clock regression against the committed baseline
 (virtual-time ``service/*`` rows gate unscaled -- they are deterministic).
 
@@ -522,7 +522,9 @@ def _aged_shape(n_zones, zone_cap, bb=256, k=3):
 
     s, _ = solve_stripes_per_segment(zone_cap, 1, bb)
     seg_cap = k * s
-    cap = n_zones * seg_cap
+    # manual-GC arrays (gc_free_segments_low=0) escrow one zone per drive as
+    # the guaranteed restage destination, so only n_zones-1 are writable
+    cap = (n_zones - 1) * seg_cap
     n_writes = int(cap - 0.55 * seg_cap)
     logical = int(n_writes - 0.5 * seg_cap)
     return logical, n_writes
@@ -853,13 +855,21 @@ def bench_straggler():
              f"speedup={res.speedup:.3f}_cst_bits={sched.commit_table_bits(g)}")
 
 
+def bench_degraded_write():
+    """Always-writable degraded array: survivor-width write tail vs healthy,
+    re-widening rebuild cost (see benchmarks/bench_degraded_write.py)."""
+    from benchmarks.bench_degraded_write import run_degraded_write
+
+    run_degraded_write(emit, QUICK)
+
+
 ALL = [
     bench_zns_primitives, bench_write, bench_reads, bench_group_size,
     bench_raid_schemes, bench_recovery, bench_hybrid, bench_gc,
     bench_l2p_offload, bench_trace, bench_latency_qos, bench_e2e_write,
     bench_read_batched, bench_gc_pipeline, bench_recovery_pipeline,
     bench_kernels_batched, bench_kernels, bench_checkpoint, bench_service,
-    bench_cache, bench_obs, bench_straggler,
+    bench_cache, bench_obs, bench_degraded_write, bench_straggler,
 ]
 
 # --quick runs the cheap subset (each well under a minute on CPU)
@@ -867,7 +877,8 @@ QUICK_SET = [
     bench_zns_primitives, bench_group_size, bench_raid_schemes,
     bench_trace, bench_latency_qos, bench_e2e_write, bench_read_batched,
     bench_gc_pipeline, bench_recovery_pipeline, bench_kernels_batched,
-    bench_service, bench_cache, bench_obs, bench_straggler,
+    bench_service, bench_cache, bench_obs, bench_degraded_write,
+    bench_straggler,
 ]
 
 
@@ -904,6 +915,7 @@ CHECK_NOSCALE_PREFIXES = (
     "cache/hit_", "cache/degraded_",
     "obs/trace_overhead_qd", "obs/slo_admission_static",
     "obs/slo_admission_slo",
+    "degraded/",
 )
 CHECK_SLACK = 1.25   # fail when us_per_call grows >25% over the baseline
 CHECK_MIN_US = 5.0   # skip sub-5us rows: timer/scheduler noise swamps them
@@ -976,7 +988,7 @@ def main() -> None:
                     help="small shapes / cheap subset for CI time budgets")
     ap.add_argument("--json", default=None,
                     help="machine-readable output path ('' to disable). "
-                         "Defaults: --quick -> BENCH_PR8.json (the committed "
+                         "Defaults: --quick -> BENCH_PR9.json (the committed "
                          "baseline: the quick set carries the perf acceptance "
                          "figures), full -> BENCH_FULL.json, "
                          "--only -> disabled; each command maps to one file "
@@ -995,7 +1007,7 @@ def main() -> None:
         if args.only:
             json_path = ""
         else:
-            json_path = "BENCH_PR8.json" if args.quick else "BENCH_FULL.json"
+            json_path = "BENCH_PR9.json" if args.quick else "BENCH_FULL.json"
     print("name,us_per_call,derived")
     for fn in (QUICK_SET if QUICK else ALL):
         if args.only and args.only not in fn.__name__:

@@ -406,6 +406,17 @@ class ZapRAIDArray:
         # True while gc_once() is restaging survivors: segment opens may dip
         # into the gc_reserved_zones escrow only then.
         self._gc_active = False
+        # Degraded-mode write width: the physical drives new segments span.
+        # Healthy arrays use every drive (member index == drive index, the
+        # historical layout, bit-identical).  ``fail_drive`` re-rotates onto
+        # the survivors so new stripe groups open at survivor width; rebuild
+        # re-widens (see _rewiden).  Mixed widths coexist: every segment
+        # carries its own ``drive_ids`` member map.
+        self._active_ids: tuple[int, ...] = tuple(range(cfg.n_drives))
+        # per-width scheme/codec caches (narrow survivor-width variants of
+        # cfg.scheme; the kernel coeff matrices are already lru-cached)
+        self._schemes: dict[int, object] = {cfg.n_drives: self.scheme}
+        self._codecs: dict[int, StripeCodec] = {cfg.n_drives: self.codec}
 
         if not _recovering:
             self._open_initial_segments()
@@ -420,6 +431,48 @@ class ZapRAIDArray:
         return solve_stripes_per_segment(
             self.zns_cfg.zone_cap_blocks, chunk_blocks, self.zns_cfg.block_bytes
         )
+
+    # ---------------------------------------------- mixed-width scheme/codec
+
+    def _scheme_for_width(self, width: int):
+        """The cfg scheme instantiated at ``width`` drives (survivor width).
+
+        Raises RuntimeError when the scheme cannot operate that narrow
+        (raid6 below 3 drives, raid01 below 2)."""
+        sch = self._schemes.get(width)
+        if sch is None:
+            min_w = 2 if self.scheme.mirror else self.scheme.m + 1
+            if width < max(min_w, 1):
+                raise RuntimeError(
+                    f"{self.cfg.scheme} is not writable at width {width}"
+                )
+            sch = make_scheme(self.cfg.scheme, width)
+            self._schemes[width] = sch
+        return sch
+
+    def _codec_for_width(self, width: int) -> StripeCodec:
+        codec = self._codecs.get(width)
+        if codec is None:
+            codec = StripeCodec(
+                self._scheme_for_width(width),
+                use_pallas=self.cfg.use_pallas, interpret=self.cfg.interpret,
+            )
+            codec.copy_stats = self.stats
+            self._codecs[width] = codec
+        return codec
+
+    def _scheme_for(self, info: SegmentInfo):
+        return self._scheme_for_width(info.n_drives)
+
+    def _codec_for(self, info: SegmentInfo) -> StripeCodec:
+        return self._codec_for_width(info.n_drives)
+
+    def _active_drive_ids(self) -> tuple[int, ...]:
+        """Healthy drives new segments may span (mirror widths stay even)."""
+        ids = tuple(i for i, d in enumerate(self.drives) if not d.failed)
+        if self.scheme.mirror and len(ids) % 2:
+            ids = ids[:-1]  # a mirror stripe needs drive pairs
+        return ids
 
     def reserved_zones(self) -> int:
         """Effective GC escrow: zones/drive foreground opens must leave.
@@ -443,27 +496,63 @@ class ZapRAIDArray:
         sit *exactly* at the watermark, and reserving a zone there would
         push the array below its own GC exit threshold for good -- so
         drives with fewer than ``4 * (auto + watermark + 1)`` zones keep
-        the historical escrow-less behavior."""
+        the historical auto-sizing behavior but still get the 1-zone
+        minimum below.
+
+        Manual-GC configs (``gc_free_segments_low == 0``) used to run
+        escrow-less: nothing cleans proactively, so foreground could eat
+        every last zone -- after which even a *manual* ``gc_once()`` would
+        deadlock opening its restage destination.  They now fall back to a
+        *1-zone minimum* whenever GC is possible at all (the geometry
+        admits at least one segment beyond the open ones), so a GC pass
+        always keeps one restage destination.  The fallback minimum gates
+        *segment opens only*: it is excluded from ``free_segment_count()``
+        so anything reading the watermark arithmetic is unchanged.
+        Capacity-tight geometries with a live watermark keep historical
+        behavior -- there the inline watermark GC is the protection, and a
+        floor would push the array below its own GC exit threshold."""
         if self.cfg.gc_reserved_zones:
             return self.cfg.gc_reserved_zones
+        auto = self._auto_reserved_zones()
+        if auto:
+            return auto
+        # fallback: manual-GC configs keep one restage destination zone
+        if (
+            self.cfg.gc_free_segments_low < 1
+            and self.zns_cfg.n_zones >= len(self.cfg.chunk_sizes()) + 2
+        ):
+            return 1
+        return 0
+
+    def _auto_reserved_zones(self) -> int:
+        """Geometry-auto-sized escrow (the watermark-shifting part)."""
         if self.cfg.gc_free_segments_low < 1:
             return 0
         auto = len(self.cfg.chunk_sizes())
         headroom = auto + self.cfg.gc_free_segments_low + 1
         if self.zns_cfg.n_zones < 4 * headroom:
             return 0
-        free = min(len(fz) for fz in self.free_zones)
-        return auto if free <= headroom else 0
+        return auto if self._min_free_zones() <= headroom else 0
+
+    def _min_free_zones(self) -> int:
+        """Scarcest healthy drive's free-zone count (failed drives cannot
+        gate foreground opens: new segments span survivors only)."""
+        counts = [
+            len(fz) for fz, d in zip(self.free_zones, self.drives) if not d.failed
+        ]
+        return min(counts) if counts else 0
 
     def free_segment_count(self) -> int:
         """Free segments available to *foreground* writes per drive.
 
         The GC escrow (``reserved_zones()``) is invisible here unless a
         GC pass is in flight, so GC-trigger watermarks fire before the
-        escrow is all that is left."""
-        free = min(len(fz) for fz in self.free_zones)
+        escrow is all that is left.  Only the explicit / auto-sized escrow
+        shifts this count; the 1-zone fallback open floor does not (it
+        protects exhaustion without perturbing GC schedules)."""
+        free = self._min_free_zones()
         if not self._gc_active:
-            free -= self.reserved_zones()
+            free -= self.cfg.gc_reserved_zones or self._auto_reserved_zones()
         return max(free, 0)
 
     def has_staged(self) -> bool:
@@ -524,36 +613,41 @@ class ZapRAIDArray:
                 )
 
     def _open_segment(self, seg_class: int, chunk_blocks: int, group_size: int) -> int:
+        # New segments span the current active drive set: every drive when
+        # healthy (member index == drive index), the survivors when degraded.
+        drive_ids = self._active_ids
+        scheme = self._scheme_for_width(len(drive_ids))
         # Foreground opens stop short of the escrowed zones; only GC restage
         # (self._gc_active) may consume them, so a GC pass at full utilization
         # always has a destination segment (the deadlock fix, ROADMAP item 4).
         floor = 0 if self._gc_active else self.reserved_zones()
-        for fz in self.free_zones:
-            if len(fz) <= floor:
+        for p in drive_ids:
+            if len(self.free_zones[p]) <= floor:
                 raise RuntimeError("out of free zones; GC required")
-        zone_ids = tuple(fz.pop() for fz in self.free_zones)
+        zone_ids = tuple(self.free_zones[p].pop() for p in drive_ids)
         s, _ = self._layout_for(chunk_blocks)
         info = SegmentInfo(
             seg_id=self.next_seg_id,
             scheme_name=self.scheme.name,
-            k=self.scheme.k,
-            m=self.scheme.m,
+            k=scheme.k,
+            m=scheme.m,
             zone_ids=zone_ids,
             chunk_blocks=chunk_blocks,
             group_size=group_size,
             seg_class=int(seg_class),
             create_ts=self._now(),
             n_stripes=s,
+            drive_ids=drive_ids,
         )
         self.next_seg_id += 1
-        # write the replicated header chunk to every zone
+        # write the replicated header chunk to every member zone
         hdr_block = pack_header(info, self.zns_cfg.block_bytes)
         hdr_chunk = np.zeros((chunk_blocks, self.zns_cfg.block_bytes), np.uint8)
         hdr_chunk[0] = hdr_block
         oobs = np.zeros(chunk_blocks, dtype=OOB_DTYPE)
         oobs["lba"] = INVALID_LBA
-        for d, z in zip(self.drives, zone_ids):
-            d.zone_write(z, 0, hdr_chunk, oobs)
+        for p, z in zip(drive_ids, zone_ids):
+            self.drives[p].zone_write(z, 0, hdr_chunk, oobs)
             self.stats.device_blocks_written += chunk_blocks
         rec = _SegmentRecord(info)
         self.segments[info.seg_id] = rec
@@ -609,18 +703,23 @@ class ZapRAIDArray:
         return self.cfg.group_size if seg_class == int(SegmentClass.SMALL) else 1
 
     def _new_stripe(self, seg_class: int) -> _InFlightStripe:
-        """Fresh in-flight stripe, arena-backed on the batched datapath."""
+        """Fresh in-flight stripe, arena-backed on the batched datapath.
+
+        Stripe capacity follows the *active* write width (k shrinks while
+        degraded); arenas are keyed per (class, k) so re-widening gets its
+        full-width arena back without reallocating."""
+        k = self._scheme_for_width(len(self._active_ids)).k
         arena = None
         if self.cfg.batched and self.zns_cfg.block_bytes % 4 == 0:
-            arena = self._arenas.get(seg_class)
+            arena = self._arenas.get((seg_class, k))
             if arena is None:
                 arena = _StripeArena(
-                    self.scheme.k, self._chunk_blocks_for(seg_class),
+                    k, self._chunk_blocks_for(seg_class),
                     self.zns_cfg.block_bytes, self._group_size_for(seg_class),
                 )
-                self._arenas[seg_class] = arena
+                self._arenas[(seg_class, k)] = arena
         return _InFlightStripe(
-            self.scheme.k, self._chunk_blocks_for(seg_class),
+            k, self._chunk_blocks_for(seg_class),
             self.zns_cfg.block_bytes, arena,
         )
 
@@ -733,18 +832,41 @@ class ZapRAIDArray:
 
     def _select_segment(self, seg_class: int) -> _OpenSegment:
         if seg_class == int(SegmentClass.LARGE) and self.large_ids:
-            sid = self.large_ids[self._rr_large % len(self.large_ids)]
+            i = self._rr_large % len(self.large_ids)
             self._rr_large += 1
-            return self.open_segments[sid]
+            return self._rotation_slot(self.large_ids, i, SegmentClass.LARGE,
+                                       self.cfg.large_chunk_blocks, 1)
         ids = self.small_ids
+        cb = (self.cfg.small_chunk_blocks if self.cfg.hybrid
+              else self.cfg.chunk_blocks)
         if len(ids) == 1:
-            return self.open_segments[ids[0]]
+            return self._rotation_slot(ids, 0, SegmentClass.SMALL, cb,
+                                       self.cfg.group_size)
         # N_s > 1: round-robin the Zone-Write segments, spill to the reserved
         # Zone-Append segment every cycle (models "no idle ZW segment").
-        ring = ids[1:] + ids[:1]
-        sid = ring[self._rr_small % len(ring)]
+        i = (self._rr_small % len(ids) + 1) % len(ids)
         self._rr_small += 1
-        return self.open_segments[sid]
+        gsz = self.cfg.group_size if i == 0 else 1
+        return self._rotation_slot(ids, i, SegmentClass.SMALL, cb, gsz)
+
+    def _rotation_slot(
+        self, ids: list, i: int, seg_class, chunk_blocks: int, group_size: int
+    ) -> _OpenSegment:
+        """Rotation slot -> open segment, re-opening a stale slot.
+
+        A segment roll-over that failed at the reserved-zone floor (loud
+        RuntimeError mid-seal) leaves the slot pointing at the sealed
+        segment.  Retrying the open here lets a later GC restage
+        (floor-exempt via ``_gc_active``) heal the rotation and un-wedge the
+        array, while a foreground retry hits the same loud error again."""
+        sid = ids[i]
+        ost = self.open_segments.get(sid)
+        if ost is None:
+            ids[i] = sid = self._open_segment(
+                int(seg_class), chunk_blocks, group_size
+            )
+            ost = self.open_segments[sid]
+        return ost
 
     def _pending_count(self, ost: _OpenSegment) -> int:
         """Stripes built-but-uncommitted (double-buffered) for this segment."""
@@ -787,6 +909,7 @@ class ZapRAIDArray:
         info = ost.info
         k, m, c = info.k, info.m, info.chunk_blocks
         bb = self.zns_cfg.block_bytes
+        codec = self._codec_for(info)
         commit_ts = self._now()
         stripe.ts[:] = commit_ts
         for slot in range(stripe.capacity):
@@ -796,7 +919,7 @@ class ZapRAIDArray:
                 if buf is not None and buf[0] is stripe and buf[1] == slot:
                     del self._buffered[lba]
         data = stripe.blocks.reshape(k, c * bb)
-        parity = self.codec.encode_np(data).reshape(m, c, bb) if m else np.zeros(
+        parity = codec.encode_np(data).reshape(m, c, bb) if m else np.zeros(
             (0, c, bb), np.uint8
         )
         meta_mask = stripe.meta_gids >= 0
@@ -814,7 +937,7 @@ class ZapRAIDArray:
         data_oob["stripe"] = stripe_seq
         if m:
             p_lba, p_ts = parity_oob(
-                self.codec, data_oob["lba"], data_oob["ts"]
+                codec, data_oob["lba"], data_oob["ts"]
             )
             par_oob = np.zeros((m, c), dtype=OOB_DTYPE)
             par_oob["lba"] = p_lba
@@ -851,6 +974,8 @@ class ZapRAIDArray:
         info = ost.info
         k, m, c = info.k, info.m, info.chunk_blocks
         bb = self.zns_cfg.block_bytes
+        scheme = self._scheme_for(info)
+        codec = self._codec_for(info)
         s_count = len(raws)
         # commit timestamps: the same values s_count sequential _now() calls
         # would produce, assigned in staging order
@@ -878,8 +1003,8 @@ class ZapRAIDArray:
             gids_all = np.stack([r.meta_gids for r in raws])
         # data payload for the drive commits: a dtype view of the same gather
         data_all = kops.unpack_bytes_np(packed)[:s_count].reshape(s_count, k, c, bb)
-        if m and not self.scheme.mirror:
-            parity_dev = self.codec.encode_batch_async(packed)
+        if m and not scheme.mirror:
+            parity_dev = codec.encode_batch_async(packed)
         else:
             parity_dev = None  # mirror copies / RAID-0: no device work
         # superseded-copy cancellation marked these slots as padding already;
@@ -904,7 +1029,7 @@ class ZapRAIDArray:
         data_oob["stripe"] = seqs[:, None, None]
         if m:
             p_lba, p_ts = parity_oob_batch(
-                self.codec, data_oob["lba"], data_oob["ts"]
+                codec, data_oob["lba"], data_oob["ts"]
             )
             par_oob = np.zeros((s_count, m, c), dtype=OOB_DTYPE)
             par_oob["lba"] = p_lba
@@ -948,13 +1073,14 @@ class ZapRAIDArray:
         """Ordered Zone Write commit: every chunk lands at the static offset."""
         info = ost.info
         c = info.chunk_blocks
+        scheme = self._scheme_for(info)
         seq = built["seq"]
         off = info.data_start() + seq * c
         for drive_idx in range(info.n_drives):
-            role = self.scheme.drive_to_role(drive_idx, seq)
+            role = scheme.drive_to_role(drive_idx, seq)
             payload, oobs = self._role_payload(built, role)
             zone = info.zone_ids[drive_idx]
-            self.drives[drive_idx].zone_write(zone, off, payload, oobs)
+            self.drives[info.drive_ids[drive_idx]].zone_write(zone, off, payload, oobs)
             self.stats.device_blocks_written += c
             ost.meta[drive_idx, off - c : off] = oobs  # data-region index = off - C
         info.stripes_written += 1
@@ -1014,13 +1140,19 @@ class ZapRAIDArray:
         m, c = info.m, info.chunk_blocks
         n = info.n_drives
         bb = self.zns_cfg.block_bytes
+        scheme = self._scheme_for(info)
+        codec = self._codec_for(info)
+        narrow = len(info.drive_ids) < self.cfg.n_drives
+        if narrow and self.obs_event is not None:
+            self.obs_event("commit_narrow.begin", seg_id=info.seg_id,
+                           width=info.n_drives)
         seqs = grp["seqs"]
         s_count = len(seqs)
-        if self.scheme.mirror:
+        if scheme.mirror:
             parity_all = grp["data_all"]
         elif m:
             t0 = time.perf_counter() if self.encode_listener else 0.0
-            parity_np = self.codec.materialize(grp["parity_dev"])
+            parity_np = codec.materialize(grp["parity_dev"])
             if self.encode_listener is not None:
                 self.encode_listener(
                     info, s_count, (time.perf_counter() - t0) * 1e6
@@ -1032,7 +1164,7 @@ class ZapRAIDArray:
             parity_all = np.zeros((s_count, 0, c, bb), np.uint8)
         codeword = np.concatenate([grp["data_all"], parity_all], axis=1)
         oob_code = np.concatenate([grp["data_oob"], grp["par_oob"]], axis=1)
-        rot = self.scheme.rotation_many(seqs)
+        rot = scheme.rotation_many(seqs)
         order = grp["order"]
         offsets = np.empty((s_count, n), dtype=np.int64)
         if self.budget.remaining is not None:
@@ -1042,7 +1174,7 @@ class ZapRAIDArray:
                 role = int((drive_idx - rot[s_i]) % n)
                 zone = info.zone_ids[drive_idx]
                 try:
-                    off = self.drives[drive_idx].zone_append_commit(
+                    off = self.drives[info.drive_ids[drive_idx]].zone_append_commit(
                         zone, codeword[s_i, role], oob_code[s_i, role]
                     )
                 except DeviceCrashed as e:
@@ -1068,7 +1200,9 @@ class ZapRAIDArray:
                 payload = codeword[s_list, roles]
                 oobs = oob_code[s_list, roles]
                 zone = info.zone_ids[d]
-                offs = self.drives[d].zone_append_commit_many(zone, payload, oobs)
+                offs = self.drives[info.drive_ids[d]].zone_append_commit_many(
+                    zone, payload, oobs
+                )
                 self.stats.device_blocks_written += payload.shape[0] * c
                 base = int(offs[0]) - c
                 ost.meta[d, base : base + offs.shape[0] * c] = oobs.reshape(-1)
@@ -1082,11 +1216,18 @@ class ZapRAIDArray:
         self._finish_group_bookkeeping(ost, grp, offsets, codeword, parity_all)
         for raw in grp["raws"]:
             raw.release()
+        if narrow and self.obs_event is not None:
+            self.obs_event("commit_narrow.end", seg_id=info.seg_id)
 
     def _commit_group_legacy(self, ost: _OpenSegment) -> None:
         """Per-stripe build + per-command commit (``batched=False``)."""
         info = ost.info
         c = info.chunk_blocks
+        scheme = self._scheme_for(info)
+        narrow = len(info.drive_ids) < self.cfg.n_drives
+        if narrow and self.obs_event is not None:
+            self.obs_event("commit_narrow.begin", seg_id=info.seg_id,
+                           width=info.n_drives)
         staged = [
             self._build_stripe(ost, raw, info.stripes_written + i)
             for i, raw in enumerate(ost.group_buffer)
@@ -1106,11 +1247,13 @@ class ZapRAIDArray:
         for oi in order:
             s_i, drive_idx = ops[oi]
             built = staged[s_i]
-            role = self.scheme.drive_to_role(drive_idx, built["seq"])
+            role = scheme.drive_to_role(drive_idx, built["seq"])
             payload, oobs = self._role_payload(built, role)
             zone = info.zone_ids[drive_idx]
             try:
-                off = self.drives[drive_idx].zone_append_commit(zone, payload, oobs)
+                off = self.drives[info.drive_ids[drive_idx]].zone_append_commit(
+                    zone, payload, oobs
+                )
             except DeviceCrashed as e:
                 crashed = e
                 break
@@ -1134,6 +1277,8 @@ class ZapRAIDArray:
         for raw in ost.group_buffer:
             raw.release()
         ost.group_buffer = []
+        if narrow and self.obs_event is not None:
+            self.obs_event("commit_narrow.end", seg_id=info.seg_id)
 
     def _finish_stripe_bookkeeping(
         self, ost: _OpenSegment, built: dict, per_drive_off: dict[int, int]
@@ -1142,9 +1287,10 @@ class ZapRAIDArray:
         info = ost.info
         rec = self.segments[info.seg_id]
         k, c = info.k, info.chunk_blocks
+        scheme = self._scheme_for(info)
         seq = built["seq"]
         for role in range(k):
-            drive_idx = self.scheme.role_to_drive(role, seq)
+            drive_idx = scheme.role_to_drive(role, seq)
             off = per_drive_off[drive_idx]
             for b in range(c):
                 lba = int(built["lbas"][role, b])
@@ -1208,7 +1354,7 @@ class ZapRAIDArray:
         n = info.n_drives
         seqs = grp["seqs"]
         s_count = len(seqs)
-        rot = self.scheme.rotation_many(seqs)
+        rot = self._scheme_for(info).rotation_many(seqs)
         drive_of = (np.arange(k)[None, :] + rot[:, None]) % n          # (S, k)
         base_off = np.take_along_axis(offsets, drive_of, axis=1)       # (S, k)
         blk_off = base_off[:, :, None] + np.arange(c)[None, None, :]   # (S, k, c)
@@ -1329,18 +1475,19 @@ class ZapRAIDArray:
         info = ost.info
         footer_start = info.data_start() + info.n_stripes * info.chunk_blocks
         for drive_idx in range(info.n_drives):
+            drive = self.drives[info.drive_ids[drive_idx]]
             zone = info.zone_ids[drive_idx]
             foot = pack_footer(ost.meta[drive_idx], self.zns_cfg.block_bytes)
-            wp = int(self.drives[drive_idx].wp[zone])
+            wp = int(drive.wp[zone])
             skip = wp - footer_start
             assert 0 <= skip <= foot.shape[0], (wp, footer_start, foot.shape)
             if skip < foot.shape[0]:
                 rest = foot[skip:]
                 oobs = np.zeros(rest.shape[0], dtype=OOB_DTYPE)
                 oobs["lba"] = INVALID_LBA
-                self.drives[drive_idx].zone_write(zone, wp, rest, oobs)
+                drive.zone_write(zone, wp, rest, oobs)
                 self.stats.device_blocks_written += rest.shape[0]
-            self.drives[drive_idx].finish_zone(zone)
+            drive.finish_zone(zone)
         info.state = int(SegmentState.SEALED)
         del self.open_segments[info.seg_id]
         # replace the open-segment slot with a fresh segment of the same class
@@ -1400,15 +1547,18 @@ class ZapRAIDArray:
         segs, drives, offs = unpack_pba_many(pbas[pbas != int(NO_PBA)])
         faulted: list[tuple[int, int, np.ndarray, np.ndarray]] = []
         for key in {(int(s), int(d)) for s, d in zip(segs, drives)}:
-            seg_id, drive_idx = key
+            seg_id, drive_idx = key  # drive_idx is the segment-member index
             sel = (segs == seg_id) & (drives == drive_idx)
             idxs = mapped[sel]
-            zone = self.segments[seg_id].info.zone_ids[drive_idx]
+            s_info = self.segments[seg_id].info
+            zone = s_info.zone_ids[drive_idx]
             if (seg_id, drive_idx) in self._rebuild_pending:
                 faulted.append((seg_id, drive_idx, idxs, offs[sel]))
                 continue
             try:
-                out[idxs] = self.drives[drive_idx].read_blocks(zone, offs[sel])
+                out[idxs] = self.drives[s_info.drive_ids[drive_idx]].read_blocks(
+                    zone, offs[sel]
+                )
             except DriveFailed:
                 faulted.append((seg_id, drive_idx, idxs, offs[sel]))
         for seg_id, drive_idx, idxs, f_offs in faulted:
@@ -1442,12 +1592,13 @@ class ZapRAIDArray:
         return out
 
     def _read_pba(self, pba: int) -> np.ndarray:
-        seg_id, drive_idx, off = unpack_pba(pba)
+        seg_id, drive_idx, off = unpack_pba(pba)  # drive_idx = member index
         if (seg_id, drive_idx) in self._rebuild_pending:
             return self._degraded_read(seg_id, drive_idx, off)
+        info = self.segments[seg_id].info
         try:
-            return self.drives[drive_idx].read(
-                self.segments[seg_id].info.zone_ids[drive_idx], off, 1
+            return self.drives[info.drive_ids[drive_idx]].read(
+                info.zone_ids[drive_idx], off, 1
             )[0].copy()
         except DriveFailed:
             return self._degraded_read(seg_id, drive_idx, off)
@@ -1468,47 +1619,51 @@ class ZapRAIDArray:
     def _reconstruct_chunk(
         self, rec: _SegmentRecord, failed_drive: int, chunk_idx: int
     ) -> np.ndarray:
-        """Decode the chunk at (failed_drive, chunk_idx) from survivors."""
+        """Decode the chunk at (failed member, chunk_idx) from survivors."""
         info = rec.info
         c = info.chunk_blocks
         bb = self.zns_cfg.block_bytes
+        scheme = self._scheme_for(info)
+        codec = self._codec_for(info)
         seq, member_chunks = self._chunk_members(rec, failed_drive, chunk_idx)
-        lost_role = self.scheme.drive_to_role(failed_drive, seq)
-        if self.scheme.mirror:
+        lost_role = scheme.drive_to_role(failed_drive, seq)
+        if scheme.mirror:
             # read the surviving twin copy directly
-            twin = (lost_role + self.scheme.k) % (2 * self.scheme.k)
+            twin = (lost_role + scheme.k) % (2 * scheme.k)
             for d, cidx in member_chunks.items():
-                if self.scheme.drive_to_role(d, seq) == twin:
+                if scheme.drive_to_role(d, seq) == twin:
                     zone = info.zone_ids[d]
-                    return self.drives[d].read(
+                    return self.drives[info.drive_ids[d]].read(
                         zone, info.data_start() + cidx * c, c
                     ).copy()
             raise RuntimeError("mirror copy also lost")
         rows, roles = [], []
         for d, cidx in member_chunks.items():
-            if len(rows) == self.scheme.k:
+            if len(rows) == scheme.k:
                 break
             zone = info.zone_ids[d]
             off0 = info.data_start() + cidx * c
-            rows.append(self.drives[d].read(zone, off0, c).reshape(c * bb))
-            roles.append(self.scheme.drive_to_role(d, seq))
-        if len(rows) < self.scheme.k:
+            rows.append(
+                self.drives[info.drive_ids[d]].read(zone, off0, c).reshape(c * bb)
+            )
+            roles.append(scheme.drive_to_role(d, seq))
+        if len(rows) < scheme.k:
             raise RuntimeError("not enough surviving chunks to decode")
-        data = self.codec.decode_np(np.stack(rows), tuple(roles)).reshape(
-            self.scheme.k, c, bb
+        data = codec.decode_np(np.stack(rows), tuple(roles)).reshape(
+            scheme.k, c, bb
         )
-        if lost_role < self.scheme.k:
+        if lost_role < scheme.k:
             return data[lost_role]
         # lost chunk was parity: re-encode
-        par = self.codec.encode_np(data.reshape(self.scheme.k, c * bb))
-        return par.reshape(self.scheme.m, c, bb)[lost_role - self.scheme.k]
+        par = codec.encode_np(data.reshape(scheme.k, c * bb))
+        return par.reshape(scheme.m, c, bb)[lost_role - scheme.k]
 
     # -- batched reconstruction (rebuild datapath) ----------------------------
 
     def _chunk_members(
         self, rec: _SegmentRecord, failed_drive: int, chunk_idx: int
     ) -> tuple[int, dict[int, int]]:
-        """(stripe seq, {surviving drive -> chunk idx}) for one lost chunk."""
+        """(stripe seq, {surviving member -> chunk idx}) for one lost chunk."""
         info = rec.info
         if info.uses_append:
             cst = rec.cst
@@ -1520,7 +1675,7 @@ class ZapRAIDArray:
             for d in range(info.n_drives):
                 if (
                     d == failed_drive
-                    or self.drives[d].failed
+                    or self.drives[info.drive_ids[d]].failed
                     or (info.seg_id, d) in self._rebuild_pending
                 ):
                     continue
@@ -1534,7 +1689,7 @@ class ZapRAIDArray:
                 d: chunk_idx
                 for d in range(info.n_drives)
                 if d != failed_drive
-                and not self.drives[d].failed
+                and not self.drives[info.drive_ids[d]].failed
                 and (info.seg_id, d) not in self._rebuild_pending
             }
         return seq, members
@@ -1563,28 +1718,30 @@ class ZapRAIDArray:
         """Body of ``_reconstruct_chunks`` (split so the obs hook can
         bracket the survivor gathers + fused decode with begin/end)."""
         info = rec.info
-        k, m, c = self.scheme.k, self.scheme.m, info.chunk_blocks
+        scheme = self._scheme_for(info)
+        codec = self._codec_for(info)
+        k, m, c = scheme.k, scheme.m, info.chunk_blocks
         bb = self.zns_cfg.block_bytes
         n = len(chunk_idxs)
         out = np.zeros((n, c, bb), np.uint8)
         oobs = np.zeros((n, c), dtype=OOB_DTYPE)
         oobs["lba"] = INVALID_LBA
         seqs = np.empty(n, dtype=np.int64)
-        chosen: list[list[tuple[int, int]]] = []  # per chunk: [(drive, cidx)] * k
+        chosen: list[list[tuple[int, int]]] = []  # per chunk: [(member, cidx)] * k
         roles_of: list[tuple[int, ...]] = []
         lost_roles = np.empty(n, dtype=np.int64)
-        twin_src: list[tuple[int, int]] = []  # mirror: (drive, cidx) of the twin
+        twin_src: list[tuple[int, int]] = []  # mirror: (member, cidx) of the twin
         for pos, chunk_idx in enumerate(int(ci) for ci in chunk_idxs):
             seq, members = self._chunk_members(rec, failed_drive, chunk_idx)
             seqs[pos] = seq
-            lost_role = self.scheme.drive_to_role(failed_drive, seq)
+            lost_role = scheme.drive_to_role(failed_drive, seq)
             lost_roles[pos] = lost_role
-            if self.scheme.mirror:
-                twin = (lost_role + self.scheme.k) % (2 * self.scheme.k)
+            if scheme.mirror:
+                twin = (lost_role + scheme.k) % (2 * scheme.k)
                 src = next(
                     (
                         (d, cidx) for d, cidx in members.items()
-                        if self.scheme.drive_to_role(d, seq) == twin
+                        if scheme.drive_to_role(d, seq) == twin
                     ),
                     None,
                 )
@@ -1594,27 +1751,28 @@ class ZapRAIDArray:
                 chosen.append([])
                 roles_of.append(())
                 continue
-            picks = list(members.items())[: self.scheme.k]
-            if len(picks) < self.scheme.k:
+            picks = list(members.items())[: scheme.k]
+            if len(picks) < scheme.k:
                 raise RuntimeError("not enough surviving chunks to decode")
             chosen.append(picks)
             roles_of.append(
-                tuple(self.scheme.drive_to_role(d, seq) for d, _ in picks)
+                tuple(scheme.drive_to_role(d, seq) for d, _ in picks)
             )
         oobs["stripe"] = seqs[:, None]
-        if self.scheme.mirror:
+        if scheme.mirror:
             # one gather per twin drive for payload and OOB alike
             by_drive: dict[int, list[int]] = {}
             for pos, (d, _) in enumerate(twin_src):
                 by_drive.setdefault(d, []).append(pos)
             for d, poss in by_drive.items():
+                drive = self.drives[info.drive_ids[d]]
                 zone = info.zone_ids[d]
                 offs = np.concatenate([
                     info.data_start() + twin_src[p][1] * c + np.arange(c)
                     for p in poss
                 ])
-                out[poss] = self.drives[d].read_blocks(zone, offs).reshape(-1, c, bb)
-                oobs[poss] = self.drives[d].read_oob_blocks(zone, offs).reshape(-1, c)
+                out[poss] = drive.read_blocks(zone, offs).reshape(-1, c, bb)
+                oobs[poss] = drive.read_oob_blocks(zone, offs).reshape(-1, c)
             return out, oobs
         # gather survivor payload + metadata rows, one scatter-read per drive
         rows = np.empty((n, k, c * bb), np.uint8)
@@ -1625,13 +1783,14 @@ class ZapRAIDArray:
             for row, (d, cidx) in enumerate(picks):
                 by_drive2.setdefault(d, []).append((pos, row, cidx))
         for d, entries in by_drive2.items():
+            drive = self.drives[info.drive_ids[d]]
             zone = info.zone_ids[d]
             offs = np.concatenate([
                 info.data_start() + cidx * c + np.arange(c)
                 for _, _, cidx in entries
             ])
-            blocks = self.drives[d].read_blocks(zone, offs).reshape(-1, c * bb)
-            roobs = self.drives[d].read_oob_blocks(zone, offs).reshape(-1, c)
+            blocks = drive.read_blocks(zone, offs).reshape(-1, c * bb)
+            roobs = drive.read_oob_blocks(zone, offs).reshape(-1, c)
             for e, (pos, row, _) in enumerate(entries):
                 rows[pos, row] = blocks[e]
                 rows_lba[pos, row] = roobs[e]["lba"]
@@ -1639,11 +1798,11 @@ class ZapRAIDArray:
         # one fused decode per distinct surviving-role set
         for roles in sorted(set(roles_of)):
             poss = np.array([p for p, r in enumerate(roles_of) if r == roles])
-            data = self.codec.decode_batch_np(rows[poss], roles).reshape(
+            data = codec.decode_batch_np(rows[poss], roles).reshape(
                 len(poss), k, c, bb
             )
             d_lba, d_ts = decode_meta_batch(
-                self.codec, rows_lba[poss], rows_ts[poss], roles
+                codec, rows_lba[poss], rows_ts[poss], roles
             )
             lost = lost_roles[poss]
             for data_role in np.unique(lost[lost < k]):
@@ -1653,11 +1812,11 @@ class ZapRAIDArray:
                 oobs["ts"][sel] = d_ts[lost == data_role, int(data_role)]
             par_sel = lost >= k
             if np.any(par_sel):
-                par = self.codec.encode_batch_np(
+                par = codec.encode_batch_np(
                     data[par_sel].reshape(-1, k, c * bb)
                 ).reshape(-1, m, c, bb)
                 p_lba, p_ts = parity_oob_batch(
-                    self.codec, d_lba[par_sel], d_ts[par_sel]
+                    codec, d_lba[par_sel], d_ts[par_sel]
                 )
                 for e, pos in enumerate(poss[par_sel]):
                     role = int(lost_roles[pos]) - k
@@ -1815,9 +1974,10 @@ class ZapRAIDArray:
             didxs = np.flatnonzero(rec.valid[drive_idx])
             if didxs.size == 0:
                 continue
+            drive = self.drives[info.drive_ids[drive_idx]]
             zone = info.zone_ids[drive_idx]
             if (
-                self.drives[drive_idx].failed
+                drive.failed
                 or (info.seg_id, drive_idx) in self._rebuild_pending
             ):
                 chunk_idxs, inv = np.unique(didxs // c, return_inverse=True)
@@ -1829,8 +1989,8 @@ class ZapRAIDArray:
                 offs = info.data_start() + didxs
                 # read_blocks gathers via advanced indexing: already a fresh
                 # array, no defensive copy needed
-                blocks = self.drives[drive_idx].read_blocks(zone, offs)
-                oob_arr = self.drives[drive_idx].read_oob_blocks(zone, offs)
+                blocks = drive.read_blocks(zone, offs)
+                oob_arr = drive.read_oob_blocks(zone, offs)
                 lba_parts.append(oob_arr["lba"].astype(np.uint64))
             blk_parts.append(blocks)
         if not lba_parts:
@@ -1858,6 +2018,7 @@ class ZapRAIDArray:
         m_gids: list[int] = []
         m_blocks: list[np.ndarray] = []
         for drive_idx in range(info.n_drives):
+            drive = self.drives[info.drive_ids[drive_idx]]
             zone = info.zone_ids[drive_idx]
             pending = (info.seg_id, drive_idx) in self._rebuild_pending
             for didx in np.flatnonzero(rec.valid[drive_idx]):
@@ -1865,8 +2026,8 @@ class ZapRAIDArray:
                 try:
                     if pending:
                         raise DriveFailed("zone awaiting paced rebuild")
-                    block = self.drives[drive_idx].read(zone, off, 1)[0].copy()
-                    oob = self.drives[drive_idx].read_oob(zone, off, 1)[0]
+                    block = drive.read(zone, off, 1)[0].copy()
+                    oob = drive.read_oob(zone, off, 1)[0]
                 except DriveFailed:
                     block = self._degraded_read(info.seg_id, drive_idx, off)
                     oob = self._reconstruct_oob(rec, drive_idx, int(didx) // c)[
@@ -1913,6 +2074,20 @@ class ZapRAIDArray:
         # Restage segment opens may consume the reserved-zone escrow while
         # this pass runs (cleared before both exits below).
         self._gc_active = True
+        info = rec.info
+        self._restage_live(rec)
+        self.flush()
+        self._release_segment(rec)
+        self._gc_active = False
+        if self.obs_event is not None:
+            self.obs_event("gc.end", seg_id=info.seg_id,
+                           blocks_moved=self.stats.gc_blocks_moved - moved0)
+        return True
+
+    def _restage_live(self, rec: _SegmentRecord) -> None:
+        """Collect ``rec``'s live blocks and restage the still-eligible ones
+        through the normal write path (the middle of a GC pass; also the
+        re-widening relocation of survivor-width segments -- see _rewiden)."""
         info = rec.info
         if self.cfg.batched:
             u_lbas, u_blocks, m_gids, m_blocks = self._gc_collect_batched(rec)
@@ -1977,32 +2152,174 @@ class ZapRAIDArray:
                     continue
                 self._append_block(target_class, -1, m_blocks[i], 0, meta_gid=gid)
                 self.stats.gc_blocks_moved += 1
-        self.flush()
-        # release the old segment's zones
+
+    def _release_segment(self, rec: _SegmentRecord) -> None:
+        """Reclaim every member zone of ``rec`` and drop the segment.
+
+        A failed member's zone is returned to that drive's free list without
+        a device reset (the drive cannot take commands; ``replace()`` wipes
+        its media wholesale), so GC keeps reclaiming while degraded."""
+        info = rec.info
         for drive_idx in range(info.n_drives):
-            self.drives[drive_idx].reset_zone(info.zone_ids[drive_idx])
-            self.free_zones[drive_idx].append(info.zone_ids[drive_idx])
+            p = info.drive_ids[drive_idx]
+            if not self.drives[p].failed:
+                self.drives[p].reset_zone(info.zone_ids[drive_idx])
+            self.free_zones[p].append(info.zone_ids[drive_idx])
             self._rebuild_pending.discard((info.seg_id, drive_idx))
+        self.open_segments.pop(info.seg_id, None)
         del self.segments[info.seg_id]
-        self._gc_active = False
-        if self.obs_event is not None:
-            self.obs_event("gc.end", seg_id=info.seg_id,
-                           blocks_moved=self.stats.gc_blocks_moved - moved0)
-        return True
 
     # -------------------------------------------------------------- drive fail
 
     def fail_drive(self, drive_idx: int) -> None:
+        """Mark a drive failed and re-rotate writes onto the survivors.
+
+        Staged blocks (partial stripes, buffered Zone-Append groups) are
+        drained host-side and restaged at survivor width, so the array stays
+        fully writable while degraded: new segments open at k-1 data + m
+        parity on the healthy drives, existing full-width open segments
+        freeze until rebuild re-adopts them.  When the scheme cannot operate
+        at the survivor width (raid6 past two failures, raid0 data loss) the
+        rotation is left alone and the next write raises."""
         self._sync_pending()  # the deferred group still owns healthy drives
         self.drives[drive_idx].fail()
+        try:
+            self._scheme_for_width(len(self._active_drive_ids()))
+        except RuntimeError:
+            return  # not writable this narrow; reads still decode
+        staged = self._drain_staged()
+        self._rebuild_rotation()
+        self._restage_drained(staged)
+
+    def _drain_staged(self) -> list[tuple[int, int, np.ndarray, int]]:
+        """Pull every volatile staged block back to the host: in-flight
+        partial stripes and buffered (uncommitted) Zone-Append stripes.
+        Returns [(seg_class, lba, block, meta_gid)] in staging order and
+        releases the arena slots -- the caller restages after changing the
+        write rotation (fail_drive / _rewiden)."""
+        self._sync_pending()
+        staged: list[tuple[int, int, np.ndarray, int]] = []
+
+        def collect(seg_class: int, stripe: _InFlightStripe) -> None:
+            for i in range(stripe.fill):
+                lba = int(stripe.lbas[i])
+                gid = int(stripe.meta_gids[i])
+                if lba < 0 and gid < 0:
+                    continue  # padding or a cancelled superseded copy
+                if lba >= 0:
+                    self._buffered.pop(lba, None)
+                staged.append((seg_class, lba, stripe.blocks[i].copy(), gid))
+            stripe.release()
+
+        for ost in self.open_segments.values():
+            for stripe in ost.group_buffer:
+                collect(ost.info.seg_class, stripe)
+            ost.group_buffer = []
+        for seg_class, stripe in list(self._in_flight.items()):
+            collect(seg_class, stripe)
+        self._in_flight.clear()
+        return staged
+
+    def _restage_drained(self, staged: list[tuple[int, int, np.ndarray, int]]) -> None:
+        for seg_class, lba, block, gid in staged:
+            self._append_block(seg_class, lba, block, 0, meta_gid=gid)
+            if gid >= 0:
+                # the drained copy's staging ref moves to the re-appended one
+                self._meta_unref(gid)
+
+    def _rebuild_rotation(self) -> None:
+        """Point the open-segment rotation at the current active drive set.
+
+        Re-adopts existing open segments that span exactly the active drives
+        (in seg_id order) and opens fresh ones at active width for the rest.
+        Open segments at other widths stay open but leave the rotation --
+        frozen full-width segments while degraded, survivor-width segments
+        after a re-widening rebuild (the latter are then relocated away by
+        _rewiden)."""
+        ids = self._active_drive_ids()
+        self._scheme_for_width(len(ids))  # raises if unwritable this narrow
+        self._active_ids = ids
+        by_class: dict[tuple[int, bool], list[int]] = {}
+        for sid in sorted(self.open_segments):
+            ost = self.open_segments[sid]
+            info = ost.info
+            if info.drive_ids != ids:
+                continue
+            if info.stripes_written + self._pending_count(ost) >= info.n_stripes:
+                continue  # data-complete: will seal, not take new stripes
+            if any((sid, d) in self._rebuild_pending for d in range(info.n_drives)):
+                continue
+            by_class.setdefault(
+                (info.seg_class, info.uses_append), []
+            ).append(sid)
+
+        def take(seg_class: int, chunk_blocks: int, group_size: int) -> int:
+            lst = by_class.get((int(seg_class), group_size > 1))
+            if lst:
+                return lst.pop(0)
+            return self._open_segment(seg_class, chunk_blocks, group_size)
+
+        if not self.cfg.hybrid:
+            self.small_ids = [
+                take(SegmentClass.SMALL, self.cfg.chunk_blocks, self.cfg.group_size)
+            ]
+            self.large_ids = []
+            return
+        small, large = [], []
+        for i in range(self.cfg.n_small):
+            g = self.cfg.group_size if i == 0 else 1  # only one ZA segment
+            small.append(take(SegmentClass.SMALL, self.cfg.small_chunk_blocks, g))
+        for _ in range(self.cfg.n_large):
+            large.append(take(SegmentClass.LARGE, self.cfg.large_chunk_blocks, 1))
+        self.small_ids, self.large_ids = small, large
+
+    def _rewiden(self) -> None:
+        """Re-widen after rebuild: move writes back to the full drive set and
+        relocate survivor-width segments onto full-width stripes.
+
+        Narrow groups are read (fused decode where a member is still
+        failed), re-encoded at the active width through the normal write
+        path, and their zones reclaimed -- the re-widening backfill.  With
+        multiple failures (raid6) only segments *narrower than the current
+        active width* relocate; full-width segments holding a still-failed
+        member wait for that drive's own rebuild."""
+        try:
+            ids = self._active_drive_ids()
+            self._scheme_for_width(len(ids))
+        except RuntimeError:
+            return  # still too degraded to write; nothing to re-widen onto
+        staged = self._drain_staged()
+        self._rebuild_rotation()
+        self._restage_drained(staged)
+        narrow = [
+            rec for sid, rec in sorted(self.segments.items())
+            if len(rec.info.drive_ids) < len(ids)
+        ]
+        if not narrow:
+            return
+        if self.obs_event is not None:
+            self.obs_event("rewiden.begin", n_segments=len(narrow))
+        self._gc_active = True  # relocation may consume the GC escrow
+        try:
+            for rec in narrow:
+                self._restage_live(rec)
+                self.flush()
+                self._release_segment(rec)
+        finally:
+            self._gc_active = False
+        if self.obs_event is not None:
+            self.obs_event("rewiden.end", n_segments=len(narrow))
 
     def rebuild_drive(self, drive_idx: int) -> None:
-        """Full-drive recovery (§3.5) onto a replacement drive."""
+        """Full-drive recovery (§3.5) onto a replacement drive, then
+        re-widen: survivor-width segments written while degraded are
+        re-encoded at full width and backfilled across all drives."""
         self._sync_pending()
         self.drives[drive_idx].replace()
         scaffold: dict[int, tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
         for rec in sorted(self.segments.values(), key=lambda r: r.info.seg_id):
             self._rebuild_segment(rec, drive_idx, scaffold)
+        self._rewiden()
 
     def _rebuild_scaffold(
         self, scaffold: dict, chunk_blocks: int
@@ -2030,12 +2347,19 @@ class ZapRAIDArray:
         ``rebuild_drive`` calls this for every live segment; the timed
         pipeline's paced rebuild actor calls it one segment per tick so the
         reconstruction traffic contends with foreground I/O over time.
+        ``drive_idx`` is the *physical* drive: segments the replaced drive is
+        not a member of (survivor-width groups written while it was failed)
+        are skipped here -- re-widening relocates them instead (_rewiden).
         ``scaffold`` is the caller-held scratch-buffer cache (see
         :meth:`_rebuild_scaffold`) -- required, so the per-segment
         reallocation this refactor removed cannot quietly return."""
-        new = self.drives[drive_idx]
         info = rec.info
-        zone = info.zone_ids[drive_idx]
+        if drive_idx not in info.drive_ids:
+            return
+        member = info.drive_ids.index(drive_idx)
+        new = self.drives[drive_idx]
+        scheme = self._scheme_for(info)
+        zone = info.zone_ids[member]
         c = info.chunk_blocks
         bb = self.zns_cfg.block_bytes
         hdr_chunk, hdr_oob, meta_buf = self._rebuild_scaffold(scaffold, c)
@@ -2046,7 +2370,7 @@ class ZapRAIDArray:
         # sealed => full layout; open => per-CST/our records
         ost = self.open_segments.get(info.seg_id)
         if ost is not None:
-            n_chunks = self._zone_chunk_count(rec, drive_idx)
+            n_chunks = self._zone_chunk_count(rec, member)
         else:
             n_chunks = info.n_stripes
         meta = meta_buf[: n_chunks * c]
@@ -2056,30 +2380,30 @@ class ZapRAIDArray:
             # whole-zone batched reconstruction: per-drive gather reads,
             # one fused decode per surviving-role set, one ordered write
             chunks, oob_all = self._reconstruct_chunks(
-                rec, drive_idx, np.arange(n_chunks)
+                rec, member, np.arange(n_chunks)
             )
             meta[:] = oob_all.reshape(-1)
             new.zone_write(
                 zone, info.data_start(), chunks.reshape(-1, bb), meta
             )
-            self.stats.recovery_blocks_read += n_chunks * self.scheme.k * c
+            self.stats.recovery_blocks_read += n_chunks * scheme.k * c
         else:
             for chunk_idx in range(n_chunks):
-                chunk = self._reconstruct_chunk(rec, drive_idx, chunk_idx)
-                oobs = self._reconstruct_oob(rec, drive_idx, chunk_idx)
+                chunk = self._reconstruct_chunk(rec, member, chunk_idx)
+                oobs = self._reconstruct_oob(rec, member, chunk_idx)
                 off = info.data_start() + chunk_idx * c
                 new.zone_write(zone, off, chunk, oobs)
                 meta[chunk_idx * c : (chunk_idx + 1) * c] = oobs
-                self.stats.recovery_blocks_read += self.scheme.k * c
+                self.stats.recovery_blocks_read += scheme.k * c
         if ost is not None:
-            ost.meta[drive_idx, : n_chunks * c] = meta
+            ost.meta[member, : n_chunks * c] = meta
         if info.state == int(SegmentState.SEALED):
             foot = pack_footer(meta, bb)
             foot_oob = np.zeros(foot.shape[0], dtype=OOB_DTYPE)
             foot_oob["lba"] = INVALID_LBA
             new.zone_write(zone, int(new.wp[zone]), foot, foot_oob)
             new.finish_zone(zone)
-        self._rebuild_pending.discard((info.seg_id, drive_idx))
+        self._rebuild_pending.discard((info.seg_id, member))
 
     def _zone_chunk_count(self, rec: _SegmentRecord, drive_idx: int) -> int:
         """Chunks committed to (open) segment on this drive = stripes written."""
@@ -2091,17 +2415,19 @@ class ZapRAIDArray:
         """Rebuild the lost chunk's OOB entries from survivors (parity OOB)."""
         info = rec.info
         c = info.chunk_blocks
+        scheme = self._scheme_for(info)
+        codec = self._codec_for(info)
         seq, members = self._chunk_members(rec, failed_drive, chunk_idx)
-        lost_role = self.scheme.drive_to_role(failed_drive, seq)
+        lost_role = scheme.drive_to_role(failed_drive, seq)
         out = np.zeros(c, dtype=OOB_DTYPE)
         out["stripe"] = seq
-        if self.scheme.mirror:
+        if scheme.mirror:
             # copy OOB from the surviving mirror twin
-            twin = (lost_role + self.scheme.k) % (2 * self.scheme.k)
+            twin = (lost_role + scheme.k) % (2 * scheme.k)
             for d, cidx in members.items():
-                if self.scheme.drive_to_role(d, seq) == twin:
+                if scheme.drive_to_role(d, seq) == twin:
                     zone = info.zone_ids[d]
-                    return self.drives[d].read_oob(
+                    return self.drives[info.drive_ids[d]].read_oob(
                         zone, info.data_start() + cidx * c, c
                     ).copy()
             raise RuntimeError("mirror OOB lost")
@@ -2109,23 +2435,25 @@ class ZapRAIDArray:
         # (parity_oob); gather k surviving (lba, ts) rows and decode.
         rows_lba, rows_ts, roles = [], [], []
         for d, cidx in members.items():
-            if len(roles) == self.scheme.k:
+            if len(roles) == scheme.k:
                 break
             zone = info.zone_ids[d]
-            oob = self.drives[d].read_oob(zone, info.data_start() + cidx * c, c)
+            oob = self.drives[info.drive_ids[d]].read_oob(
+                zone, info.data_start() + cidx * c, c
+            )
             rows_lba.append(oob["lba"].astype(np.uint64))
             rows_ts.append(oob["ts"].astype(np.uint64))
-            roles.append(self.scheme.drive_to_role(d, seq))
+            roles.append(scheme.drive_to_role(d, seq))
         data_lba, data_ts = decode_meta(
-            self.codec, np.stack(rows_lba), np.stack(rows_ts), tuple(roles)
+            codec, np.stack(rows_lba), np.stack(rows_ts), tuple(roles)
         )
-        if lost_role < self.scheme.k:
+        if lost_role < scheme.k:
             out["lba"] = data_lba[lost_role]
             out["ts"] = data_ts[lost_role]
         else:
-            p_lba, p_ts = parity_oob(self.codec, data_lba, data_ts)
-            out["lba"] = p_lba[lost_role - self.scheme.k]
-            out["ts"] = p_ts[lost_role - self.scheme.k]
+            p_lba, p_ts = parity_oob(codec, data_lba, data_ts)
+            out["lba"] = p_lba[lost_role - scheme.k]
+            out["ts"] = p_ts[lost_role - scheme.k]
         return out
 
     # ------------------------------------------------------------ crash + misc

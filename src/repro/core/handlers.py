@@ -197,8 +197,12 @@ class HandlerPipeline:
         if name.endswith(".end"):
             key = name[:-4]
             t0 = self._obs_marks.pop(key, eng.now)
-            span_name = {"gc": "gc.pass", "degraded": "degraded.decode"}.get(
-                key, key)
+            span_name = {
+                "gc": "gc.pass",
+                "degraded": "degraded.decode",
+                "commit_narrow": "stripe.commit_narrow",
+                "rewiden": "rebuild.rewiden",
+            }.get(key, key)
             tr.span("array", span_name, t0, max(t0, eng.io_watermark, eng.now),
                     cat="background", **args)
             return
@@ -342,8 +346,12 @@ class HandlerPipeline:
                 self.tracer.span("array", "stripe.commit_barrier",
                                  eng.now, barrier, cat="commit",
                                  seg_id=info.seg_id)
+        # ops index drives by segment-member position; map to the physical
+        # drives the segment spans (identity when healthy, survivors when
+        # the group was opened at degraded width)
+        member_drives = [self.array.drives[p] for p in info.drive_ids]
         order, group_done = plan_group_appends(
-            self.array.drives, info.zone_ids, ops, info.chunk_blocks, floor
+            member_drives, info.zone_ids, ops, info.chunk_blocks, floor
         )
         self._barriers[info.seg_id] = group_done
         self.counters["segment_state"] += 1
@@ -371,7 +379,9 @@ class HandlerPipeline:
         self.counters["device_io"] += len(per_drive_off)
         t_done = eng.now
         for d, off in per_drive_off.items():
-            t = self.array.drives[d].chunk_completion(info.zone_ids[d], off)
+            # d is the segment-member index; translate to the physical drive
+            t = self.array.drives[info.drive_ids[d]].chunk_completion(
+                info.zone_ids[d], off)
             if t is not None and t > t_done:
                 t_done = t
         for lba in built["lbas"].ravel():
@@ -455,6 +465,13 @@ class HandlerPipeline:
     def schedule_drive_failure(self, drive_idx: int, at: float) -> None:
         self.engine.at(at, self.array.fail_drive, drive_idx)
 
+    def attach_faults(self, plan) -> "Any":
+        """Arm a :class:`repro.sim.faults.FaultPlan` on this pipeline's
+        engine; returns the armed :class:`~repro.sim.faults.FaultInjector`
+        (its ``log`` records every fired event)."""
+        from repro.sim.faults import FaultInjector
+        return FaultInjector(self, plan).arm()
+
     def schedule_rebuild(
         self, drive_idx: int, at: float, interval_us: float = 0.0
     ) -> None:
@@ -489,26 +506,34 @@ class HandlerPipeline:
         arr._sync_pending()
         arr.drives[drive_idx].replace()
         scaffold: dict = {}
-        sealed_ids = []
+        sealed = []  # (seg_id, member index of the replaced drive)
         for rec in sorted(arr.segments.values(), key=lambda r: r.info.seg_id):
+            if drive_idx not in rec.info.drive_ids:
+                # survivor-width segment written while the drive was failed;
+                # the final re-widening pass relocates it
+                continue
             if rec.info.seg_id in arr.open_segments:
                 # open segments take new appends between ticks, so their
                 # zones must be whole before foreground writes resume
                 arr._rebuild_segment(rec, drive_idx, scaffold)
             else:
-                arr._rebuild_pending.add((rec.info.seg_id, drive_idx))
-                sealed_ids.append(rec.info.seg_id)
+                member = rec.info.drive_ids.index(drive_idx)
+                arr._rebuild_pending.add((rec.info.seg_id, member))
+                sealed.append((rec.info.seg_id, member))
         self.recorder.note("rebuild_device_us", max(0.0, eng.io_watermark - mark))
-        if sealed_ids:
+        if sealed:
             eng.at(eng.now + interval_us, self._ev_rebuild_step,
-                   drive_idx, sealed_ids, 0, interval_us, scaffold)
+                   drive_idx, sealed, 0, interval_us, scaffold)
+        else:
+            eng.at(eng.now + interval_us, self._ev_rewiden)
 
     def _ev_rebuild_step(
-        self, drive_idx: int, seg_ids: list, i: int, interval_us: float, scaffold: dict
+        self, drive_idx: int, sealed: list, i: int, interval_us: float, scaffold: dict
     ) -> None:
         arr = self.array
         eng = self.engine
-        rec = arr.segments.get(seg_ids[i])
+        seg_id, member = sealed[i]
+        rec = arr.segments.get(seg_id)
         if rec is not None:
             mark = eng.mark_io()
             arr._rebuild_segment(rec, drive_idx, scaffold)
@@ -517,14 +542,28 @@ class HandlerPipeline:
                 self.tracer.span("array", "rebuild.segment", eng.now,
                                  max(eng.now, eng.io_watermark),
                                  cat="background", drive=drive_idx,
-                                 seg_id=seg_ids[i])
+                                 seg_id=seg_id)
         else:
             # the segment was GC'd while pending; nothing left to rebuild
-            arr._rebuild_pending.discard((seg_ids[i], drive_idx))
+            arr._rebuild_pending.discard((seg_id, member))
         self.counters["segment_state"] += 1
-        if i + 1 < len(seg_ids):
+        if i + 1 < len(sealed):
             eng.at(eng.now + interval_us, self._ev_rebuild_step,
-                   drive_idx, seg_ids, i + 1, interval_us, scaffold)
+                   drive_idx, sealed, i + 1, interval_us, scaffold)
+        else:
+            # every zone is whole again: relocate survivor-width segments
+            # back to full width on the rebuilt drive set
+            eng.at(eng.now + interval_us, self._ev_rewiden)
+
+    def _ev_rewiden(self) -> None:
+        arr = self.array
+        eng = self.engine
+        # No mark_io() here: this actor fires *after* the last rebuild step,
+        # and resetting the shared watermark then would let the final
+        # rebuild.segment span outrun the run's max(now, io_watermark) bound.
+        before = max(eng.now, eng.io_watermark)
+        arr._rewiden()
+        self.recorder.note("rebuild_device_us", max(0.0, eng.io_watermark - before))
 
     def schedule_gc(
         self,

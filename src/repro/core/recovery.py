@@ -42,7 +42,6 @@ from repro.core.array import ZapRaidConfig, ZapRAIDArray, _OpenSegment, _Segment
 from repro.core.group_layout import CompactStripeTable
 from repro.core.l2p import NO_PBA, pack_pba, pack_pba_many, unpack_pba, unpack_pba_many
 from repro.core.segment import (
-    SegmentClass,
     SegmentInfo,
     SegmentState,
     header_candidates,
@@ -50,7 +49,17 @@ from repro.core.segment import (
     unpack_footer,
     unpack_header,
 )
-from repro.core.zns import INVALID_LBA, SimZnsDrive, ZnsConfig, ZoneState
+from repro.core.zns import (
+    INVALID_LBA,
+    OOB_DTYPE,
+    SimZnsDrive,
+    ZnsConfig,
+    ZoneState,
+)
+
+
+class RecoveryError(RuntimeError):
+    """Crash state the scanner cannot safely resolve (fail-loud path)."""
 
 
 @dataclasses.dataclass
@@ -61,8 +70,20 @@ class _FoundSegment:
     sealed: bool = False
     dirty: bool = False
     complete_seqs: set = dataclasses.field(default_factory=set)
-    # drive -> (n_chunks, C) OOB rows for the persisted data-region prefix
+    # member -> (n_chunks, C) OOB rows for the persisted data-region prefix
     meta: dict = dataclasses.field(default_factory=dict)
+    # members whose physical drive is failed: media unreadable, metadata is
+    # synthesized from the survivors' parity OOB after install
+    absent: set = dataclasses.field(default_factory=set)
+    # member whose zone a crashed rebuild left behind the sealed others;
+    # its zone is reset and rewritten from survivors after install
+    rebuild_member: int | None = None
+
+    def present(self) -> list[int]:
+        skip = self.absent
+        if self.rebuild_member is not None:
+            skip = skip | {self.rebuild_member}
+        return [d for d in range(self.info.n_drives) if d not in skip]
 
     def data_end(self) -> int:
         return self.info.data_start() + self.info.n_stripes * self.info.chunk_blocks
@@ -71,7 +92,7 @@ class _FoundSegment:
         return self.data_end() + self.footer_blocks
 
     def data_complete(self) -> bool:
-        return all(wp >= self.data_end() for wp in self.wps)
+        return all(self.wps[d] >= self.data_end() for d in self.present())
 
     def complete_arr(self) -> np.ndarray:
         return np.fromiter(sorted(self.complete_seqs), np.int64, len(self.complete_seqs))
@@ -83,8 +104,13 @@ def _note_segment(found, info, drives, zns_cfg) -> None:
     )
     info.n_stripes = s
     fs = _FoundSegment(info=info, wps=[0] * len(info.zone_ids), footer_blocks=foot)
-    for drive_idx, zid in enumerate(info.zone_ids):
-        fs.wps[drive_idx] = int(drives[drive_idx].wp[zid])
+    for member, zid in enumerate(info.zone_ids):
+        d = drives[info.drive_ids[member]]
+        if d.failed:
+            fs.absent.add(member)  # stale media; never trust a dead drive
+            fs.wps[member] = -1
+        else:
+            fs.wps[member] = int(d.wp[zid])
     found[info.seg_id] = fs
 
 
@@ -92,6 +118,8 @@ def _scan_headers(drives, zns_cfg, stats) -> dict[int, _FoundSegment]:
     """Per-zone header reads + unpack (the scalar baseline)."""
     found: dict[int, _FoundSegment] = {}
     for d in drives:
+        if d.failed:
+            continue
         for z in range(zns_cfg.n_zones):
             if d.state[z] == ZoneState.EMPTY or d.wp[z] == 0:
                 continue
@@ -107,6 +135,8 @@ def _scan_headers_batched(drives, zns_cfg, stats) -> dict[int, _FoundSegment]:
     """One cross-zone header gather per drive + vectorized magic pre-filter."""
     found: dict[int, _FoundSegment] = {}
     for d in drives:
+        if d.failed:
+            continue
         zs = np.flatnonzero((np.asarray(d.state) != ZoneState.EMPTY) & (d.wp > 0))
         if zs.size == 0:
             continue
@@ -120,17 +150,17 @@ def _scan_headers_batched(drives, zns_cfg, stats) -> dict[int, _FoundSegment]:
     return found
 
 
-def _read_zone_oob(fs: _FoundSegment, drives, drive_idx: int, stats):
+def _read_zone_oob(fs: _FoundSegment, drives, member: int, stats):
     """(n_chunks, C) OOB rows of one zone's persisted data prefix, or None."""
     info = fs.info
     c = info.chunk_blocks
     data_start = info.data_start()
-    usable = min(fs.wps[drive_idx], fs.data_end()) - data_start
+    usable = min(fs.wps[member], fs.data_end()) - data_start
     n_chunks = max(0, usable) // c  # trailing partial chunks are dropped
     if n_chunks <= 0:
         return None
-    z = info.zone_ids[drive_idx]
-    oob = drives[drive_idx].read_oob(z, data_start, n_chunks * c)
+    z = info.zone_ids[member]
+    oob = drives[info.drive_ids[member]].read_oob(z, data_start, n_chunks * c)
     stats.recovery_blocks_read += n_chunks * c
     return oob.reshape(n_chunks, c).copy()
 
@@ -139,8 +169,8 @@ def _ragged_tail(fs: _FoundSegment) -> bool:
     """A drive with committed blocks beyond whole chunks is also dirty."""
     c = fs.info.chunk_blocks
     data_start = fs.info.data_start()
-    for drive_idx in range(fs.info.n_drives):
-        usable = min(fs.wps[drive_idx], fs.data_end()) - data_start
+    for member in fs.present():
+        usable = min(fs.wps[member], fs.data_end()) - data_start
         if usable > 0 and usable % c != 0:
             return True
     return False
@@ -148,17 +178,19 @@ def _ragged_tail(fs: _FoundSegment) -> bool:
 
 def _scan_stripes(fs: _FoundSegment, drives, stats) -> None:
     """OOB-scan the data region; classify complete vs partial stripes
-    (scalar baseline: per-chunk Python loop)."""
+    (scalar baseline: per-chunk Python loop).  Completeness is judged over
+    the *present* members: chunks on a failed drive are reconstructible
+    from parity, so they never gate a stripe."""
     per_seq_count: dict[int, int] = {}
-    for drive_idx in range(fs.info.n_drives):
-        rows = _read_zone_oob(fs, drives, drive_idx, stats)
+    for member in fs.present():
+        rows = _read_zone_oob(fs, drives, member, stats)
         if rows is None:
             continue
-        fs.meta[drive_idx] = rows
+        fs.meta[member] = rows
         for chunk in range(rows.shape[0]):
             seq = int(rows["stripe"][chunk, 0])
             per_seq_count[seq] = per_seq_count.get(seq, 0) + 1
-    n = fs.info.n_drives
+    n = len(fs.present())
     fs.complete_seqs = {s for s, cnt in per_seq_count.items() if cnt == n}
     fs.dirty = any(cnt != n for cnt in per_seq_count.values()) or _ragged_tail(fs)
 
@@ -167,13 +199,13 @@ def _scan_stripes_batched(fs: _FoundSegment, drives, stats) -> None:
     """Vectorized ``_scan_stripes``: per-drive bulk OOB read, stripe-id
     completeness via one ``np.unique`` count over all drives' chunks."""
     seq_parts: list[np.ndarray] = []
-    for drive_idx in range(fs.info.n_drives):
-        rows = _read_zone_oob(fs, drives, drive_idx, stats)
+    for member in fs.present():
+        rows = _read_zone_oob(fs, drives, member, stats)
         if rows is None:
             continue
-        fs.meta[drive_idx] = rows
+        fs.meta[member] = rows
         seq_parts.append(rows["stripe"][:, 0].astype(np.int64))
-    n = fs.info.n_drives
+    n = len(fs.present())
     if seq_parts:
         seqs, counts = np.unique(np.concatenate(seq_parts), return_counts=True)
         fs.complete_seqs = set(seqs[counts == n].tolist())
@@ -187,12 +219,13 @@ def _read_sealed_meta(fs: _FoundSegment, drives, zns_cfg, stats) -> None:
     c = info.chunk_blocks
     n_entries = info.n_stripes * c
     all_seqs: list[np.ndarray] = []
-    for drive_idx, z in enumerate(info.zone_ids):
-        foot = drives[drive_idx].read(z, fs.data_end(), fs.footer_blocks)
+    for member in fs.present():
+        z = info.zone_ids[member]
+        foot = drives[info.drive_ids[member]].read(z, fs.data_end(), fs.footer_blocks)
         stats.recovery_blocks_read += foot.shape[0]
         entries = unpack_footer(foot, n_entries, zns_cfg.block_bytes)
         rows = entries.reshape(info.n_stripes, c)
-        fs.meta[drive_idx] = rows
+        fs.meta[member] = rows
         all_seqs.append(rows["stripe"][:, 0].astype(np.int64))
     fs.complete_seqs = set(np.unique(np.concatenate(all_seqs)).tolist())
     fs.sealed = True
@@ -214,21 +247,116 @@ def recover_array(
     )
     valid, discard = [], []
     for fs in found.values():
+        healthy = [d for d in range(fs.info.n_drives) if d not in fs.absent]
+        behind = [d for d in healthy if fs.wps[d] < fs.data_end()]
+        rest_sealed = all(
+            fs.wps[d] >= fs.seal_end() for d in healthy if d not in behind
+        )
+        if behind and rest_sealed and len(healthy) > len(behind):
+            # Some members are mid-zone while every other member carries a
+            # finished footer: normal commit order (seal starts only after
+            # ALL members are data-complete) cannot produce this -- a crash
+            # interrupted a rebuild rewriting those zones.
+            if len(behind) > 1:
+                raise RecoveryError(
+                    f"segment {fs.info.seg_id}: {len(behind)} members are "
+                    "mid-zone while the rest are sealed -- crash during a "
+                    "rebuild left multiple zones inconsistent; restore from "
+                    "the replica or re-run rebuild from a healthy mirror"
+                )
+            if len(healthy) - 1 < fs.info.k:
+                raise RecoveryError(
+                    f"segment {fs.info.seg_id}: crash during rebuild and "
+                    "not enough surviving members to reconstruct"
+                )
+            fs.rebuild_member = behind[0]
+            valid.append(fs)
+            continue
+        # Crash while a rebuild was rewriting an *open* segment's zone: the
+        # replaced member's zone is wiped (no header) while survivors carry
+        # headers and possibly data.  A crash during _open_segment leaves
+        # the same shape with an empty prefix -- rewriting the header from
+        # the survivors is correct (and harmless) for both.
+        headerless = [d for d in healthy if fs.wps[d] < fs.info.chunk_blocks]
+        if headerless and len(headerless) < len(healthy):
+            if not any(fs.wps[d] > fs.info.data_start() for d in healthy):
+                # no survivor holds data: crash during _open_segment itself
+                # (paper Case 2) -- the segment is empty, discard it
+                discard.append(fs)
+                continue
+            if len(headerless) > 1:
+                raise RecoveryError(
+                    f"segment {fs.info.seg_id}: {len(headerless)} member "
+                    "zones have no header while others hold data -- crash "
+                    "left multiple zones wiped; restore from the replica"
+                )
+            if len(healthy) - 1 < fs.info.k:
+                raise RecoveryError(
+                    f"segment {fs.info.seg_id}: a member zone is wiped and "
+                    "not enough surviving members to reconstruct it"
+                )
+            fs.rebuild_member = headerless[0]
+            valid.append(fs)
+            continue
+        if behind and len(behind) == len(healthy):
+            # Fully-unsealed segment: normal commits advance members one
+            # group at a time, so write pointers can never spread by more
+            # than one group span.  A wider spread means a rebuild crashed
+            # mid-way through rewriting one member's zone -- data beyond
+            # the laggard's pointer is reconstructible but not attributable,
+            # so fail loudly rather than silently drop those stripes.
+            lead = max(fs.wps[d] for d in healthy)
+            lag = min(fs.wps[d] for d in healthy)
+            span = max(1, fs.info.group_size) * fs.info.chunk_blocks
+            if lag >= fs.info.chunk_blocks and lead - lag > span:
+                raise RecoveryError(
+                    f"segment {fs.info.seg_id}: member write pointers "
+                    f"spread {lead - lag} blocks (> one group span) -- "
+                    "crash mid-rebuild left a zone partially rewritten; "
+                    "re-run the rebuild from a healthy mirror"
+                )
         # paper Case 2: any zone below the header size => discard segment
-        (discard if any(wp < fs.info.chunk_blocks for wp in fs.wps) else valid).append(fs)
+        if any(fs.wps[d] < fs.info.chunk_blocks for d in healthy):
+            discard.append(fs)
+        else:
+            valid.append(fs)
     for fs in discard:
-        for drive_idx, z in enumerate(fs.info.zone_ids):
-            if drives[drive_idx].wp[z] > 0:
-                drives[drive_idx].reset_zone(z)
+        for member, z in enumerate(fs.info.zone_ids):
+            p = fs.info.drive_ids[member]
+            if not drives[p].failed and drives[p].wp[z] > 0:
+                drives[p].reset_zone(z)
 
     for fs in valid:
-        fully_sealed = all(wp >= fs.seal_end() for wp in fs.wps)
+        if fs.rebuild_member is not None:
+            if all(fs.wps[d] >= fs.seal_end() for d in fs.present()):
+                _read_sealed_meta(fs, drives, zns_cfg, stats)  # survivors only
+            else:
+                # open segment with a wiped member: scan the survivors'
+                # OOB prefix; the zone rewrite below restores the member
+                if batched:
+                    _scan_stripes_batched(fs, drives, stats)
+                else:
+                    _scan_stripes(fs, drives, stats)
+                if fs.dirty:
+                    raise RecoveryError(
+                        f"segment {fs.info.seg_id}: partial stripes on "
+                        "the survivors of a crashed rebuild -- winners "
+                        "cannot be safely re-read; re-run the rebuild"
+                    )
+            continue
+        fully_sealed = all(fs.wps[d] >= fs.seal_end() for d in fs.present())
         if fully_sealed:
             _read_sealed_meta(fs, drives, zns_cfg, stats)
         elif batched:
             _scan_stripes_batched(fs, drives, stats)
         else:
             _scan_stripes(fs, drives, stats)
+        if fs.dirty and fs.absent:
+            raise RecoveryError(
+                f"segment {fs.info.seg_id}: partial stripes on a degraded "
+                "segment (member drive failed) -- winners cannot be "
+                "re-read; replace the drive and rebuild before recovering"
+            )
 
     clean = [fs for fs in valid if not fs.dirty]
     dirty = [fs for fs in valid if fs.dirty]
@@ -240,18 +368,30 @@ def recover_array(
     # free-zone lists = complement of zones referenced by live segments
     used = [set() for _ in drives]
     for fs in valid:
-        for drive_idx, z in enumerate(fs.info.zone_ids):
-            used[drive_idx].add(z)
+        for member, z in enumerate(fs.info.zone_ids):
+            used[fs.info.drive_ids[member]].add(z)
     arr.free_zones = [
         [z for z in range(zns_cfg.n_zones - 1, -1, -1) if z not in used[i]]
         for i in range(len(drives))
     ]
     for i, d in enumerate(drives):
+        if d.failed:
+            continue
         for z in arr.free_zones[i]:
             if d.wp[z] > 0:
                 d.reset_zone(z)
 
     _restore_open_slots(arr)
+
+    # ---- crashed-rebuild zones: rewrite from survivors --------------------
+    scaffold: dict = {}
+    for fs in clean:
+        if fs.rebuild_member is not None:
+            _rewrite_rebuild_zone(arr, fs, drives, zns_cfg, scaffold)
+    # ---- failed-drive members: synthesize metadata from parity OOB --------
+    for fs in clean:
+        if fs.absent:
+            _synthesize_absent_meta(arr, fs)
 
     # ---- latest-wins metadata resolution over ALL valid segments ----------
     if batched:
@@ -279,9 +419,11 @@ def recover_array(
     )
     arr.flush()
     for fs in dirty:
-        for drive_idx, z in enumerate(fs.info.zone_ids):
-            drives[drive_idx].reset_zone(z)
-            arr.free_zones[drive_idx].append(z)
+        for member, z in enumerate(fs.info.zone_ids):
+            p = fs.info.drive_ids[member]
+            if not drives[p].failed:
+                drives[p].reset_zone(z)
+            arr.free_zones[p].append(z)
 
     # ---- apply the remaining (clean-segment) wins --------------------------
     _apply_wins(
@@ -292,8 +434,70 @@ def recover_array(
     for ost in list(arr.open_segments.values()):
         if ost.info.stripes_written >= ost.info.n_stripes:
             arr._seal_segment(ost)
+    # a crash between a rebuild's scaffold phase and its re-widening pass
+    # leaves survivor-width segments behind: finish the relocation now
+    arr._rewiden()
     arr._drain_meta()
     return arr
+
+
+def _rewrite_rebuild_zone(arr, fs: _FoundSegment, drives, zns_cfg, scaffold) -> None:
+    """Finish a crashed rebuild: the mid-zone member is reset and rewritten
+    from the sealed survivors.  The lost zone's original append order is
+    unknowable, so it is rewritten in canonical stripe order and that layout
+    recorded in the CST -- self-consistent with every later read/rebuild."""
+    info = fs.info
+    b = fs.rebuild_member
+    p = info.drive_ids[b]
+    z = info.zone_ids[b]
+    if drives[p].wp[z] > 0 or drives[p].state[z] != ZoneState.EMPTY:
+        drives[p].reset_zone(z)
+    rec = arr.segments[info.seg_id]
+    n_stripes = info.n_stripes if fs.sealed else int(rec.info.stripes_written)
+    if info.uses_append and rec.cst is not None and n_stripes:
+        idx = np.arange(n_stripes)
+        rec.cst.record_many(b, idx, idx % info.group_size)
+    arr._rebuild_segment(rec, p, scaffold)
+    c = info.chunk_blocks
+    if fs.sealed:
+        # read back the rewritten footer so winner harvesting sees member b
+        foot = drives[p].read(z, fs.data_end(), fs.footer_blocks)
+        arr.stats.recovery_blocks_read += foot.shape[0]
+        entries = unpack_footer(foot, info.n_stripes * c, zns_cfg.block_bytes)
+        fs.meta[b] = entries.reshape(info.n_stripes, c)
+    elif n_stripes:
+        # open segment: read back the rewritten OOB prefix instead
+        rows = drives[p].read_oob(z, info.data_start(), n_stripes * c)
+        arr.stats.recovery_blocks_read += n_stripes * c
+        fs.meta[b] = rows.reshape(n_stripes, c).copy()
+        ost = arr.open_segments.get(info.seg_id)
+        if ost is not None:
+            ost.meta[b, : n_stripes * c] = fs.meta[b].reshape(-1)
+
+
+def _synthesize_absent_meta(arr, fs: _FoundSegment) -> None:
+    """Reconstruct a failed member's OOB rows from the survivors' parity
+    OOB so its winners still install (reads reconstruct through parity).
+    Append segments get canonical CST rows for the absent member: the dead
+    zone's real arrival order is unknowable, and the replacement rebuild
+    will rewrite the zone in exactly this order."""
+    info = fs.info
+    rec = arr.segments[info.seg_id]
+    c = info.chunk_blocks
+    n_chunks = info.n_stripes if fs.sealed else int(info.stripes_written)
+    if n_chunks <= 0:
+        return
+    ost = arr.open_segments.get(info.seg_id)
+    for b in sorted(fs.absent):
+        if info.uses_append and rec.cst is not None:
+            idx = np.arange(n_chunks)
+            rec.cst.record_many(b, idx, idx % info.group_size)
+        rows = np.zeros((n_chunks, c), dtype=OOB_DTYPE)
+        for chunk_idx in range(n_chunks):
+            rows[chunk_idx] = arr._reconstruct_oob(rec, b, chunk_idx)
+        fs.meta[b] = rows
+        if ost is not None:
+            ost.meta[b, : n_chunks * c] = rows.reshape(-1)
 
 
 def _install_segment(arr: ZapRAIDArray, fs: _FoundSegment, zns_cfg) -> None:
@@ -340,38 +544,21 @@ def _install_segment(arr: ZapRAIDArray, fs: _FoundSegment, zns_cfg) -> None:
 
 
 def _restore_open_slots(arr: ZapRAIDArray) -> None:
-    cfg = arr.cfg
-    by_class: dict[tuple[int, bool], list[int]] = {}
-    for sid, ost in arr.open_segments.items():
-        if ost.info.stripes_written >= ost.info.n_stripes:
-            continue  # data-complete, awaiting re-seal; not reusable
-        key = (int(ost.info.seg_class), ost.info.group_size > 1)
-        by_class.setdefault(key, []).append(sid)
+    """Re-adopt scanned open segments as the active write slots.
 
-    def take(seg_class: int, chunk_blocks: int, group: int) -> int:
-        key = (int(seg_class), group > 1)
-        if by_class.get(key):
-            return by_class[key].pop(0)
-        return arr._open_segment(SegmentClass(seg_class), chunk_blocks, group)
-
-    arr.small_ids, arr.large_ids = [], []
-    if not cfg.hybrid:
-        arr.small_ids.append(
-            take(int(SegmentClass.SMALL), cfg.chunk_blocks, cfg.group_size)
-        )
-    else:
-        for i in range(cfg.n_small):
-            g = cfg.group_size if i == 0 else 1
-            arr.small_ids.append(take(int(SegmentClass.SMALL), cfg.small_chunk_blocks, g))
-        for _ in range(cfg.n_large):
-            arr.large_ids.append(take(int(SegmentClass.LARGE), cfg.large_chunk_blocks, 1))
+    Delegates to the array's degraded-aware rotation: open segments spanning
+    exactly the active (healthy) drive set are reused in segment-id order;
+    anything else -- including survivor-width segments once the drive set is
+    healthy again -- is left in place and fresh segments open at the active
+    width (``_rewiden`` relocates the narrow leftovers at the end)."""
+    arr._rebuild_rotation()
 
 
 def _harvest_meta(arr, fs: _FoundSegment, user_wins, map_wins) -> None:
     """Scalar harvest baseline: per-chunk/per-block loops into win dicts."""
     info = fs.info
     c = info.chunk_blocks
-    scheme = arr.scheme
+    scheme = arr._scheme_for(info)  # per-segment: widths may be mixed
     for d, rows_all in fs.meta.items():
         for chunk in range(rows_all.shape[0]):
             rows = rows_all[chunk]
@@ -406,11 +593,11 @@ def _harvest_meta_batched(arr, valid):
     resolves the per-key winner with a single lexsort: latest ts wins, and
     among equal timestamps the first-encountered entry wins -- exactly the
     scalar dict's strict-greater update semantics."""
-    scheme = arr.scheme
-    k = scheme.k
     fields, tss, pbas = [], [], []
     for fs in valid:
         info = fs.info
+        scheme = arr._scheme_for(info)  # per-segment: widths may be mixed
+        k = scheme.k
         c = info.chunk_blocks
         ds = info.data_start()
         comp = fs.complete_arr() if not fs.sealed else None
@@ -477,7 +664,8 @@ def _reinject(
     def read_from_dirty(pba: int) -> np.ndarray:
         seg_id, d, off = unpack_pba(pba)
         fs = by_seg[seg_id]
-        return drives[d].read(fs.info.zone_ids[d], off, 1)[0].copy()
+        p = fs.info.drive_ids[d]  # d is the segment-member index
+        return drives[p].read(fs.info.zone_ids[d], off, 1)[0].copy()
 
     dirty_arr = np.fromiter(sorted(dirty_ids), np.int64, len(dirty_ids))
     ud = np.flatnonzero(np.isin(unpack_pba_many(u_pbas)[0], dirty_arr))

@@ -25,7 +25,7 @@ import numpy as np
 from repro.core.zns import OOB_DTYPE, OOB_ENTRY_BYTES
 
 HEADER_MAGIC = b"ZAPR"
-HEADER_VERSION = 2
+HEADER_VERSION = 3
 
 
 class SegmentState(enum.IntEnum):
@@ -78,6 +78,11 @@ class SegmentInfo:
     n_stripes: int = 0  # filled from layout at open time
     state: int = int(SegmentState.OPEN)
     stripes_written: int = 0  # controller-side cursor (stripes fully persisted)
+    drive_ids: tuple[int, ...] = ()  # member index -> physical drive index
+
+    def __post_init__(self) -> None:
+        if not self.drive_ids:
+            self.drive_ids = tuple(range(self.k + self.m))
 
     @property
     def n_drives(self) -> int:
@@ -103,6 +108,7 @@ _HEADER_FMT = "<4sHHqHH" + "q" + "qqHq"  # see pack_header
 def pack_header(info: SegmentInfo, block_bytes: int) -> np.ndarray:
     """Serialize a SegmentInfo into one block (replicated per zone)."""
     zone_blob = struct.pack(f"<{len(info.zone_ids)}q", *info.zone_ids)
+    drive_blob = struct.pack(f"<{len(info.drive_ids)}H", *info.drive_ids)
     name_b = info.scheme_name.encode()
     payload = struct.pack(
         "<4sHHqHHqqHqH",
@@ -117,7 +123,7 @@ def pack_header(info: SegmentInfo, block_bytes: int) -> np.ndarray:
         info.seg_class,
         info.create_ts,
         len(info.zone_ids),
-    ) + name_b + zone_blob
+    ) + name_b + zone_blob + drive_blob
     if len(payload) > block_bytes:
         raise ValueError("header does not fit in one block")
     buf = np.zeros(block_bytes, dtype=np.uint8)
@@ -152,10 +158,12 @@ def unpack_header(block: np.ndarray) -> SegmentInfo | None:
     name = raw[off : off + name_len].decode()
     off += name_len
     zone_ids = struct.unpack(f"<{n_zones}q", raw[off : off + 8 * n_zones])
+    off += 8 * n_zones
+    drive_ids = struct.unpack(f"<{n_zones}H", raw[off : off + 2 * n_zones])
     return SegmentInfo(
         seg_id=seg_id, scheme_name=name, k=k, m=m, zone_ids=tuple(zone_ids),
         chunk_blocks=chunk_blocks, group_size=group_size, seg_class=seg_class,
-        create_ts=create_ts,
+        create_ts=create_ts, drive_ids=tuple(drive_ids),
     )
 
 

@@ -210,6 +210,10 @@ def standard_collector(pipe, svc=None) -> Callable[[MetricsRegistry], None]:
         reg.counters["array/gc_runs"] = float(arr.stats.gc_runs)
         reg.counters["array/gc_blocks_moved"] = float(arr.stats.gc_blocks_moved)
         reg.set("array/rebuild_pending_zones", len(arr._rebuild_pending))
+        # 1.0 while any member drive is failed: SLO monitors and dashboards
+        # can separate degraded-width commits from healthy-path latency
+        reg.set("array/degraded_mode",
+                float(any(d.failed for d in arr.drives)))
         cache = arr.cache
         if cache is not None:
             reg.set("cache/resident_blocks", cache.resident_count())

@@ -16,11 +16,15 @@ engine-side primitives it schedules on.
 """
 from repro.sim.device import ServiceModel, TimedDrive, make_timed_drives, plan_group_appends
 from repro.sim.engine import Engine
+from repro.sim.faults import FaultEvent, FaultInjector, FaultPlan
 from repro.sim.stats import LatencyRecorder
 from repro.sim.workload import Request, TenantSpec, multi_tenant, parse_msr_trace, synthetic
 
 __all__ = [
     "Engine",
+    "FaultEvent",
+    "FaultInjector",
+    "FaultPlan",
     "LatencyRecorder",
     "Request",
     "ServiceModel",

@@ -1,0 +1,108 @@
+"""Fault-injection harness: drive fail/replace events on the virtual clock.
+
+Wraps the timed pipeline's failure/rebuild actors in a declarative plan so
+tests and benchmarks can inject full-drive failures mid-write, mid-GC, or
+mid-rebuild and assert the array stays available throughout:
+
+* :class:`FaultEvent` -- one scheduled ``fail`` or ``rebuild`` (replace +
+  reconstruct) of a physical drive;
+* :class:`FaultPlan`  -- an ordered script of events.  Build one explicitly
+  (:meth:`FaultPlan.scripted`) or sample fail/repair cycles from a seeded
+  RNG (:meth:`FaultPlan.probabilistic`);
+* :class:`FaultInjector` -- arms a plan on a ``HandlerPipeline``'s engine.
+  Every fired event is appended to ``injector.log`` as
+  ``(t_us, kind, drive)`` so callers can assert what actually happened and
+  correlate it with latency samples.
+
+The injector deliberately reuses the array's own entry points
+(``fail_drive`` / ``rebuild_drive`` via the pipeline's rebuild actors), so
+an injected failure exercises exactly the degraded-write rotation, paced
+reconstruction, and re-widening paths foreground code uses -- nothing is
+mocked.  Probabilistic plans serialize fail -> rebuild cycles (one drive
+out at a time), which keeps every plan valid for ``m >= 1`` schemes while
+still hitting writes, GC passes, and checkpoint saves at arbitrary phases.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["FaultEvent", "FaultPlan", "FaultInjector"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    t_us: float
+    kind: str          # "fail" | "rebuild"
+    drive: int
+    interval_us: float = 0.0  # rebuild pacing; 0 => one-burst rebuild
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("fail", "rebuild"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    events: list
+
+    @classmethod
+    def scripted(cls, events) -> "FaultPlan":
+        """Explicit schedule; events are sorted by fire time."""
+        evs = sorted(events, key=lambda e: e.t_us)
+        return cls(events=evs)
+
+    @classmethod
+    def probabilistic(
+        cls,
+        *,
+        n_drives: int,
+        horizon_us: float,
+        mtbf_us: float,
+        repair_after_us: float,
+        seed: int,
+        rebuild_interval_us: float = 0.0,
+    ) -> "FaultPlan":
+        """Seeded fail/repair cycles: exponential inter-failure gaps with
+        mean ``mtbf_us``, uniform victim drive, fixed repair delay.  Cycles
+        are serialized (a drive is always repaired before the next failure),
+        so plans stay valid for single-parity schemes."""
+        rng = np.random.default_rng(seed)
+        events: list[FaultEvent] = []
+        t = float(rng.exponential(mtbf_us))
+        while t < horizon_us:
+            drive = int(rng.integers(0, n_drives))
+            events.append(FaultEvent(t_us=t, kind="fail", drive=drive))
+            t_repair = t + repair_after_us
+            events.append(
+                FaultEvent(t_us=t_repair, kind="rebuild", drive=drive,
+                           interval_us=rebuild_interval_us)
+            )
+            t = t_repair + float(rng.exponential(mtbf_us))
+        return cls(events=events)
+
+
+class FaultInjector:
+    """Arms a :class:`FaultPlan` on a timed ``HandlerPipeline``."""
+
+    def __init__(self, pipeline, plan: FaultPlan):
+        assert pipeline.engine is not None, "fault injection requires a timed pipeline"
+        self.pipeline = pipeline
+        self.plan = plan
+        self.log: list[tuple[float, str, int]] = []
+
+    def arm(self) -> "FaultInjector":
+        for ev in self.plan.events:
+            self.pipeline.engine.at(ev.t_us, self._fire, ev)
+        return self
+
+    def _fire(self, ev: FaultEvent) -> None:
+        pipe = self.pipeline
+        self.log.append((pipe.engine.now, ev.kind, ev.drive))
+        if ev.kind == "fail":
+            pipe.array.fail_drive(ev.drive)
+        elif ev.interval_us > 0.0:
+            pipe._ev_rebuild_start(ev.drive, ev.interval_us)
+        else:
+            pipe._ev_rebuild(ev.drive)
