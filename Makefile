@@ -1,7 +1,7 @@
 PYTHONPATH := src
 PY := PYTHONPATH=$(PYTHONPATH) python
 
-.PHONY: test test-fast bench bench-quick bench-check serve-demo cache-demo obs-demo degraded-demo
+.PHONY: test test-fast bench bench-quick bench-check serve-demo cache-demo obs-demo degraded-demo scrub-demo
 
 # Tier-1 verify: the whole suite, stop on first failure.
 test:
@@ -16,14 +16,14 @@ bench:
 	$(PY) -m benchmarks.run
 
 # Cheap subset with small shapes for CI time budgets; rewrites the committed
-# BENCH_PR9.json baseline (the quick set carries the perf acceptance figures).
+# BENCH_PR10.json baseline (the quick set carries the perf acceptance figures).
 bench-quick:
 	$(PY) -m benchmarks.run --quick
 
 # CI regression gate: rerun the quick set, fail on >25% wall-clock regression
 # against the committed baseline (writes no JSON).
 bench-check:
-	$(PY) -m benchmarks.run --check BENCH_PR9.json
+	$(PY) -m benchmarks.run --check BENCH_PR10.json
 
 # Checkpoint-traffic-under-serving demo: many training jobs stream saves
 # through the async block service while latency-class reads run alongside;
@@ -49,3 +49,11 @@ obs-demo:
 # verifies the data round trip.
 degraded-demo:
 	$(PY) examples/degraded_writes.py
+
+# End-to-end integrity demo: a probabilistic media-fault mix (bit rot,
+# torn/misdirected writes, unreadable sectors) lands under a live write
+# stream; the paced scrub actor detects every hit against the per-block
+# CRC32C lane and repairs in place; writes out/scrub_metrics.json with
+# nonzero integrity/blocks_repaired (asserted, and checked again by CI).
+scrub-demo:
+	$(PY) examples/scrub_repair.py

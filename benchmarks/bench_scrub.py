@@ -1,0 +1,117 @@
+"""Integrity benchmark: scrub throughput, verify-on-read tax, repair storm.
+
+Three virtual-time figures for the PR-10 end-to-end integrity layer
+(DESIGN.md §15), all deterministic on the ZN540-calibrated device model so
+the ``--check`` gate compares them unscaled:
+
+* ``integrity/scrub_throughput`` -- device time booked by one paced scrub
+  pass over a fully-written sealed array (bulk CRC32C verify, no faults);
+  derived column converts to verified MiB/s of media;
+* ``integrity/verify_read_overhead_p99`` -- foreground read p99 with
+  ``verify_reads`` on, vs the same load with it off: the whole-read-path
+  checksum tax (acceptance: <10%);
+* ``integrity/repair_storm_p99`` -- foreground read p99 while the paced
+  scrub actor concurrently detects and repairs a corruption storm (~2% of
+  written blocks, one hit per stripe group so every fault is repairable
+  at raid5 width); derived reports the repaired-block count.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def _shift(load, t0: float):
+    return [dataclasses.replace(r, t_us=r.t_us + t0) for r in load]
+
+
+def _make_pipe(seed: int, verify: bool):
+    from repro.core.array import ZapRaidConfig
+    from repro.core.handlers import HandlerPipeline
+    from repro.core.zns import ZnsConfig
+
+    cfg = ZapRaidConfig(scheme="raid5", n_drives=4, group_size=8,
+                        chunk_blocks=1, logical_blocks=256,
+                        gc_free_segments_low=1, verify_reads=verify)
+    zns = ZnsConfig(n_zones=16, zone_cap_blocks=64, block_bytes=256)
+    pipe = HandlerPipeline.build_timed(cfg, zns, seed=seed,
+                                       flush_interval_us=200.0)
+    rng = np.random.default_rng(seed)
+    # two overwrite rounds: more than one sealed segment on the media, so
+    # the scrub rows walk a multi-segment array, not a single zone set
+    pipe.precondition(
+        (lba, rng.integers(0, 256, (1, 256), dtype=np.uint8))
+        for _ in range(2) for lba in range(256)
+    )
+    return pipe
+
+
+def _read_load(n_ops: int):
+    from repro.sim import TenantSpec, multi_tenant
+
+    return multi_tenant([
+        TenantSpec(name="reader", kind="uniform", n_ops=n_ops,
+                   rate_iops=50_000, read_frac=1.0, seed=31),
+    ], logical_blocks=256)
+
+
+def _corrupt_per_group(arr, rng) -> int:
+    """One bit-rot hit in every stripe group of every sealed segment,
+    cycling the victim member: dense enough to be a storm (~2% of written
+    blocks at this geometry), and exactly one loss per stripe so raid5
+    repairs all of it."""
+    from repro.core.segment import SegmentState
+
+    n_bad = 0
+    for rec in sorted(arr.segments.values(), key=lambda r: r.info.seg_id):
+        info = rec.info
+        if info.state != int(SegmentState.SEALED):
+            continue
+        ds = info.data_start()
+        span = max(1, info.group_size) * info.chunk_blocks
+        n_groups = -(-info.n_stripes * info.chunk_blocks // span)
+        for g in range(n_groups):
+            m = g % info.n_drives
+            d = arr.drives[info.drive_ids[m]]
+            zone = info.zone_ids[m]
+            off = ds + g * span + int(rng.integers(0, span))
+            if off >= int(d.wp[zone]):
+                continue
+            d.corrupt_bit_rot(zone, off, int(rng.integers(0, d.cfg.block_bytes)),
+                              int(rng.integers(0, 8)))
+            n_bad += 1
+    return n_bad
+
+
+def run_scrub(emit, quick: bool) -> None:
+    n_ops = 300 if quick else 1000
+    load = _read_load(n_ops)
+
+    # -- scrub throughput over clean sealed media --------------------------
+    pipe = _make_pipe(seed=9, verify=True)
+    pipe.schedule_scrub(at=pipe.engine.now + 10.0, interval_us=20.0)
+    pipe.drain()
+    scrub_us = pipe.recorder.notes.get("scrub_device_us", 0.0)
+    blocks = pipe.array.stats.integrity_scrub_blocks
+    mib_s = blocks * 256 / max(scrub_us, 1e-9) * 1e6 / (1 << 20)
+    emit("integrity/scrub_throughput", scrub_us,
+         f"blocks={blocks}_{mib_s:.0f}MiB/s_verified")
+
+    # -- verify-on-read tax ------------------------------------------------
+    off = _make_pipe(seed=9, verify=False).replay(load).percentiles(op="R")
+    on_pipe = _make_pipe(seed=9, verify=True)
+    on = on_pipe.replay(load).percentiles(op="R")
+    emit("integrity/verify_read_overhead_p99", on["p99"],
+         f"p50={on['p50']:.1f}us_ratio="
+         f"{on['p99'] / max(off['p99'], 1e-9):.3f}x_vs_unverified")
+
+    # -- repair storm: scrub heals ~2% corruption under the read load -----
+    pipe = _make_pipe(seed=9, verify=True)
+    n_bad = _corrupt_per_group(pipe.array, np.random.default_rng(13))
+    pipe.schedule_scrub(at=pipe.engine.now + 10.0, interval_us=50.0)
+    storm = pipe.replay(_shift(load, pipe.engine.now)).percentiles(op="R")
+    repaired = pipe.array.stats.integrity_blocks_repaired
+    emit("integrity/repair_storm_p99", storm["p99"],
+         f"corrupted={n_bad}_repaired={repaired}_ratio="
+         f"{storm['p99'] / max(on['p99'], 1e-9):.2f}x_vs_clean")

@@ -13,9 +13,9 @@ each benchmark name to its measured ``us_per_call`` and ``derived`` figure,
 so the perf trajectory can be tracked across PRs.  Each command maps to its
 own file so no sweep clobbers another's baseline: ``--quick`` (small shapes,
 cheap subset, carries the perf acceptance figures) writes the committed
-``BENCH_PR9.json``; full runs write ``BENCH_FULL.json``; ``--only`` sweeps
+``BENCH_PR10.json``; full runs write ``BENCH_FULL.json``; ``--only`` sweeps
 skip the JSON unless ``--json PATH`` is given explicitly.  ``--check
-BENCH_PR9.json`` is the CI regression gate: it reruns the quick set and
+BENCH_PR10.json`` is the CI regression gate: it reruns the quick set and
 fails on a >25% wall-clock regression against the committed baseline
 (virtual-time ``service/*`` rows gate unscaled -- they are deterministic).
 
@@ -863,6 +863,14 @@ def bench_degraded_write():
     run_degraded_write(emit, QUICK)
 
 
+def bench_scrub():
+    """End-to-end integrity: scrub throughput, verify-on-read tax, repair
+    storm under foreground load (see benchmarks/bench_scrub.py)."""
+    from benchmarks.bench_scrub import run_scrub
+
+    run_scrub(emit, QUICK)
+
+
 ALL = [
     bench_zns_primitives, bench_write, bench_reads, bench_group_size,
     bench_raid_schemes, bench_recovery, bench_hybrid, bench_gc,
@@ -870,6 +878,7 @@ ALL = [
     bench_read_batched, bench_gc_pipeline, bench_recovery_pipeline,
     bench_kernels_batched, bench_kernels, bench_checkpoint, bench_service,
     bench_cache, bench_obs, bench_degraded_write, bench_straggler,
+    bench_scrub,
 ]
 
 # --quick runs the cheap subset (each well under a minute on CPU)
@@ -878,7 +887,7 @@ QUICK_SET = [
     bench_trace, bench_latency_qos, bench_e2e_write, bench_read_batched,
     bench_gc_pipeline, bench_recovery_pipeline, bench_kernels_batched,
     bench_service, bench_cache, bench_obs, bench_degraded_write,
-    bench_straggler,
+    bench_straggler, bench_scrub,
 ]
 
 
@@ -915,7 +924,7 @@ CHECK_NOSCALE_PREFIXES = (
     "cache/hit_", "cache/degraded_",
     "obs/trace_overhead_qd", "obs/slo_admission_static",
     "obs/slo_admission_slo",
-    "degraded/",
+    "degraded/", "integrity/",
 )
 CHECK_SLACK = 1.25   # fail when us_per_call grows >25% over the baseline
 CHECK_MIN_US = 5.0   # skip sub-5us rows: timer/scheduler noise swamps them
@@ -988,7 +997,7 @@ def main() -> None:
                     help="small shapes / cheap subset for CI time budgets")
     ap.add_argument("--json", default=None,
                     help="machine-readable output path ('' to disable). "
-                         "Defaults: --quick -> BENCH_PR9.json (the committed "
+                         "Defaults: --quick -> BENCH_PR10.json (the committed "
                          "baseline: the quick set carries the perf acceptance "
                          "figures), full -> BENCH_FULL.json, "
                          "--only -> disabled; each command maps to one file "
@@ -1007,7 +1016,7 @@ def main() -> None:
         if args.only:
             json_path = ""
         else:
-            json_path = "BENCH_PR9.json" if args.quick else "BENCH_FULL.json"
+            json_path = "BENCH_PR10.json" if args.quick else "BENCH_FULL.json"
     print("name,us_per_call,derived")
     for fn in (QUICK_SET if QUICK else ALL):
         if args.only and args.only not in fn.__name__:

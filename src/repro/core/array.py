@@ -69,6 +69,15 @@ from repro.core.zns import (
     ZoneState,
     make_array_drives,
 )
+from repro.integrity.checksum import crc32c_many
+
+
+class IntegrityError(RuntimeError):
+    """Unrepairable corruption: a stripe has lost more blocks (corrupt or
+    unreadable media, on top of failed/rebuilding drives) than its parity
+    can reconstruct.  Raised *instead of* ever returning wrong bytes to a
+    reader -- the loud-failure contract of the verify-on-read and scrub
+    paths."""
 
 
 @dataclasses.dataclass
@@ -95,6 +104,12 @@ class ZapRaidConfig:
     # auto-sizes from group geometry on near-full arrays -- see
     # ZapRAIDArray.reserved_zones().
     gc_reserved_zones: int = 0
+    # integrity: verify checksums on every read datapath (scalar + batched);
+    # a mismatching or unreadable block is treated as erased, reconstructed
+    # through parity, and repaired in place.  Off by default: the checksum
+    # *store* is always maintained at commit time, only the read-side verify
+    # pass is optional (bit-identity with pre-integrity baselines).
+    verify_reads: bool = False
     # datapath
     use_pallas: bool = False
     interpret: bool = True
@@ -150,6 +165,12 @@ class Stats:
     l2p_cache_hits: int = 0      # mapping-block fault-ins served by the cache
     l2p_cache_misses: int = 0    # ... that had to read media
     l2p_cache_offloads: int = 0  # CLOCK evictions spilled into the cache
+    # integrity (verify-on-read + scrub), all zero with verification off
+    integrity_corruptions_detected: int = 0  # checksum-mismatch blocks seen
+    integrity_unreadable_hits: int = 0       # UNC sectors encountered
+    integrity_blocks_repaired: int = 0       # blocks rewritten in place
+    integrity_scrub_passes: int = 0          # completed scrub_once() sweeps
+    integrity_scrub_blocks: int = 0          # blocks bulk-verified by scrub
 
     def write_amp(self) -> float:
         if self.host_blocks_written == 0:
@@ -1193,6 +1214,13 @@ class ZapRAIDArray:
                     seqs % info.group_size,
                 )
         else:
+            # one vectorized checksum pass over the whole codeword -- the
+            # payload arrays are uint8 views of the packed int32 arenas, so
+            # this is the "CRC at commit time on the arenas" point; the
+            # per-drive commits below just gather their slice of it
+            crc_all = crc32c_many(codeword.reshape(-1, bb)).reshape(
+                s_count, n, c
+            )
             for d in range(n):
                 mask = (order % n) == d
                 s_list = order[mask] // n
@@ -1201,7 +1229,7 @@ class ZapRAIDArray:
                 oobs = oob_code[s_list, roles]
                 zone = info.zone_ids[d]
                 offs = self.drives[info.drive_ids[d]].zone_append_commit_many(
-                    zone, payload, oobs
+                    zone, payload, oobs, crc_all[s_list, roles]
                 )
                 self.stats.device_blocks_written += payload.shape[0] * c
                 base = int(offs[0]) - c
@@ -1544,8 +1572,12 @@ class ZapRAIDArray:
         mapped = idx[pbas != int(NO_PBA)]
         if mapped.size == 0:
             return out
+        verify = self.cfg.verify_reads
         segs, drives, offs = unpack_pba_many(pbas[pbas != int(NO_PBA)])
-        faulted: list[tuple[int, int, np.ndarray, np.ndarray]] = []
+        # faulted: (seg, member, out idxs, zone offs, repairable) -- the last
+        # flag is True for media faults on a live drive (checksum mismatch /
+        # UNC), where the reconstructed bytes are rewritten in place
+        faulted: list[tuple[int, int, np.ndarray, np.ndarray, bool]] = []
         for key in {(int(s), int(d)) for s, d in zip(segs, drives)}:
             seg_id, drive_idx = key  # drive_idx is the segment-member index
             sel = (segs == seg_id) & (drives == drive_idx)
@@ -1553,23 +1585,37 @@ class ZapRAIDArray:
             s_info = self.segments[seg_id].info
             zone = s_info.zone_ids[drive_idx]
             if (seg_id, drive_idx) in self._rebuild_pending:
-                faulted.append((seg_id, drive_idx, idxs, offs[sel]))
+                faulted.append((seg_id, drive_idx, idxs, offs[sel], False))
                 continue
+            drive = self.drives[s_info.drive_ids[drive_idx]]
             try:
-                out[idxs] = self.drives[s_info.drive_ids[drive_idx]].read_blocks(
-                    zone, offs[sel]
-                )
+                got = drive.read_blocks(zone, offs[sel])
             except DriveFailed:
-                faulted.append((seg_id, drive_idx, idxs, offs[sel]))
-        for seg_id, drive_idx, idxs, f_offs in faulted:
+                faulted.append((seg_id, drive_idx, idxs, offs[sel], False))
+                continue
+            if verify:
+                ok = self._verify_media(drive, zone, offs[sel], got)
+                if not ok.all():
+                    bad = ~ok
+                    faulted.append(
+                        (seg_id, drive_idx, idxs[bad], offs[sel][bad], True)
+                    )
+                    out[idxs[ok]] = got[ok]
+                    continue
+            out[idxs] = got
+        for seg_id, drive_idx, idxs, f_offs, repair in faulted:
             rec = self.segments[seg_id]
             info = rec.info
             c = info.chunk_blocks
             didx = f_offs - info.data_start()
             chunk_idxs, inv = np.unique(didx // c, return_inverse=True)
-            chunks, _ = self._reconstruct_chunks(rec, drive_idx, chunk_idxs)
+            chunks, _ = self._reconstruct_chunks(
+                rec, drive_idx, chunk_idxs, verify=verify
+            )
             out[idxs] = chunks[inv, didx % c]
             self.stats.degraded_reads += int(idxs.size)
+            if repair:
+                self._repair_in_place(rec, drive_idx, f_offs, out[idxs])
         if self.cache is not None:
             # Offer every mapped miss (reconstructed blocks included) for
             # admission: a warm cache absorbs reconstruction traffic.
@@ -1597,11 +1643,73 @@ class ZapRAIDArray:
             return self._degraded_read(seg_id, drive_idx, off)
         info = self.segments[seg_id].info
         try:
-            return self.drives[info.drive_ids[drive_idx]].read(
-                info.zone_ids[drive_idx], off, 1
-            )[0].copy()
+            drive = self.drives[info.drive_ids[drive_idx]]
+            out = drive.read(info.zone_ids[drive_idx], off, 1)[0].copy()
         except DriveFailed:
             return self._degraded_read(seg_id, drive_idx, off)
+        if self.cfg.verify_reads:
+            offs = np.array([off], dtype=np.int64)
+            zone = info.zone_ids[drive_idx]
+            if not self._verify_media(drive, zone, offs, out[None, :]).all():
+                rec = self.segments[seg_id]
+                out = self._degraded_read(seg_id, drive_idx, off)
+                self._repair_in_place(rec, drive_idx, offs, out[None, :])
+        return out
+
+    # -- integrity: verify / repair (PR 10) -----------------------------------
+
+    def _verify_media(
+        self, drive, zone: int, offs: np.ndarray, blocks: np.ndarray
+    ) -> np.ndarray:
+        """Per-block verdict for a gather: checksum matches and readable.
+
+        Bumps detection counters for every failing block; callers route the
+        failures into reconstruction."""
+        ok = crc32c_many(blocks) == drive.crc_blocks(zone, offs)
+        unc = drive.unc_blocks(zone, offs)
+        ok &= ~unc
+        n_bad = int((~ok).sum())
+        if n_bad:
+            self.stats.integrity_corruptions_detected += n_bad
+            self.stats.integrity_unreadable_hits += int(unc.sum())
+        return ok
+
+    def _repair_in_place(
+        self,
+        rec: _SegmentRecord,
+        member: int,
+        offs: np.ndarray,
+        blocks: np.ndarray,
+        *,
+        refresh_cache: bool = True,
+    ) -> None:
+        """Rewrite reconstructed bytes over corrupt media (no log relocation
+        -- L2P and CST are untouched) and re-sync any cache-resident copy.
+
+        ``refresh_cache`` must be False for parity-role blocks: their OOB
+        lba field is parity-encoded metadata, not a cache key."""
+        info = rec.info
+        drive = self.drives[info.drive_ids[member]]
+        zone = info.zone_ids[member]
+        offs = np.asarray(offs, dtype=np.int64)
+        blocks = np.asarray(blocks, dtype=np.uint8).reshape(offs.size, -1)
+        drive.repair_blocks(zone, offs, blocks)
+        self.stats.integrity_blocks_repaired += int(offs.size)
+        if self.obs_event is not None:
+            self.obs_event("integrity.repair", seg_id=info.seg_id,
+                           member=member, n_blocks=int(offs.size))
+        if refresh_cache and self.cache is not None:
+            # The OOB lba field *is* the cache key encoding (lba<<1 user,
+            # (gid<<1)|1 mapping) for data-role blocks, so a repair can
+            # refresh resident copies directly -- a warm cache must never
+            # keep serving pre-repair bytes.
+            keys = drive.oob[zone, offs]["lba"]
+            live = (keys != INVALID_LBA) & (
+                keys < np.uint64(2 * self.cfg.logical_blocks)
+            )
+            if live.any():
+                self.cache.refresh_many(keys[live].astype(np.int64),
+                                        blocks[live])
 
     # -- degraded read (§3.5) -------------------------------------------------
 
@@ -1613,7 +1721,10 @@ class ZapRAIDArray:
         didx = off - info.data_start()
         chunk_idx = didx // c
         blk_in_chunk = didx % c
-        chunk = self._reconstruct_chunk(rec, failed_drive, chunk_idx)
+        if self.cfg.verify_reads:
+            chunk, _ = self._reconstruct_chunk_checked(rec, failed_drive, chunk_idx)
+        else:
+            chunk = self._reconstruct_chunk(rec, failed_drive, chunk_idx)
         return chunk[blk_in_chunk]
 
     def _reconstruct_chunk(
@@ -1658,6 +1769,80 @@ class ZapRAIDArray:
         par = codec.encode_np(data.reshape(scheme.k, c * bb))
         return par.reshape(scheme.m, c, bb)[lost_role - scheme.k]
 
+    def _reconstruct_chunk_checked(
+        self, rec: _SegmentRecord, failed_member: int, chunk_idx: int
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Verified scalar reconstruction of one lost/corrupt chunk.
+
+        Survivor candidates whose media fails verification are skipped in
+        favor of alternates (raid6 tolerates one more loss, mirrors fall to
+        the twin); when fewer than ``k`` intact chunks remain the stripe is
+        unrepairable and a loud :class:`IntegrityError` surfaces instead of
+        garbage bytes.  Returns ``(chunk (c, bb), oobs (c,))``."""
+        info = rec.info
+        c = info.chunk_blocks
+        bb = self.zns_cfg.block_bytes
+        scheme = self._scheme_for(info)
+        codec = self._codec_for(info)
+        seq, members = self._chunk_members(rec, failed_member, chunk_idx)
+        lost_role = scheme.drive_to_role(failed_member, seq)
+        oobs = np.zeros(c, dtype=OOB_DTYPE)
+        oobs["lba"] = INVALID_LBA
+        oobs["stripe"] = seq
+        if scheme.mirror:
+            twin = (lost_role + scheme.k) % (2 * scheme.k)
+            for d, cidx in members.items():
+                if scheme.drive_to_role(d, seq) != twin:
+                    continue
+                drive = self.drives[info.drive_ids[d]]
+                zone = info.zone_ids[d]
+                offs = info.data_start() + cidx * c + np.arange(c)
+                blocks = drive.read_blocks(zone, offs)
+                if self._verify_media(drive, zone, offs, blocks).all():
+                    return blocks.copy(), drive.read_oob_blocks(zone, offs).copy()
+            raise IntegrityError(
+                f"segment {info.seg_id} stripe {seq}: mirror copy of member "
+                f"{failed_member} also lost or corrupt"
+            )
+        rows, roles, lba_rows, ts_rows = [], [], [], []
+        for d, cidx in members.items():
+            if len(rows) == scheme.k:
+                break
+            drive = self.drives[info.drive_ids[d]]
+            zone = info.zone_ids[d]
+            offs = info.data_start() + cidx * c + np.arange(c)
+            blocks = drive.read_blocks(zone, offs)
+            if not self._verify_media(drive, zone, offs, blocks).all():
+                continue  # corrupt survivor: try an alternate member
+            roob = drive.read_oob_blocks(zone, offs)
+            rows.append(blocks.reshape(c * bb))
+            lba_rows.append(roob["lba"])
+            ts_rows.append(roob["ts"])
+            roles.append(scheme.drive_to_role(d, seq))
+        if len(rows) < scheme.k:
+            raise IntegrityError(
+                f"segment {info.seg_id} stripe {seq}: only {len(rows)} intact "
+                f"chunk(s) of the {scheme.k} needed to reconstruct member "
+                f"{failed_member} -- unrepairable double fault"
+            )
+        data = codec.decode_np(np.stack(rows), tuple(roles)).reshape(
+            scheme.k, c, bb
+        )
+        d_lba, d_ts = decode_meta(
+            codec, np.stack(lba_rows), np.stack(ts_rows), tuple(roles)
+        )
+        if lost_role < scheme.k:
+            oobs["lba"] = d_lba[lost_role]
+            oobs["ts"] = d_ts[lost_role]
+            return data[lost_role].copy(), oobs
+        par = codec.encode_np(data.reshape(scheme.k, c * bb)).reshape(
+            scheme.m, c, bb
+        )
+        p_lba, p_ts = parity_oob(codec, d_lba, d_ts)
+        oobs["lba"] = p_lba[lost_role - scheme.k]
+        oobs["ts"] = p_ts[lost_role - scheme.k]
+        return par[lost_role - scheme.k].copy(), oobs
+
     # -- batched reconstruction (rebuild datapath) ----------------------------
 
     def _chunk_members(
@@ -1695,26 +1880,37 @@ class ZapRAIDArray:
         return seq, members
 
     def _reconstruct_chunks(
-        self, rec: _SegmentRecord, failed_drive: int, chunk_idxs: np.ndarray
+        self,
+        rec: _SegmentRecord,
+        failed_drive: int,
+        chunk_idxs: np.ndarray,
+        verify: bool = False,
     ) -> tuple[np.ndarray, np.ndarray]:
         """Batched ``_reconstruct_chunk`` + ``_reconstruct_oob`` over a zone.
 
         Survivor payloads and OOB rows are gathered with one scatter-read per
         surviving drive, then decoded in one fused call per distinct
         surviving-role set (parity rotation yields at most ``n`` such sets).
-        Returns ``(chunks (N, c, bb) uint8, oobs (N, c) OOB_DTYPE)``.
+        With ``verify`` the survivor gathers are checksum-checked in bulk;
+        chunks whose picked survivors fail fall back to the verified scalar
+        path (:meth:`_reconstruct_chunk_checked`), which tries alternate
+        members and raises :class:`IntegrityError` when the stripe is
+        unrepairable.  Returns ``(chunks (N, c, bb), oobs (N, c))``.
         """
         if self.obs_event is not None:
             self.obs_event("degraded.begin", seg_id=rec.info.seg_id,
                            n_chunks=len(chunk_idxs),
                            failed_drive=failed_drive)
         try:
-            return self._reconstruct_chunks_obs(rec, failed_drive, chunk_idxs)
+            return self._reconstruct_chunks_obs(
+                rec, failed_drive, chunk_idxs, verify
+            )
         finally:
             if self.obs_event is not None:
                 self.obs_event("degraded.end", seg_id=rec.info.seg_id)
 
-    def _reconstruct_chunks_obs(self, rec, failed_drive, chunk_idxs):
+    def _reconstruct_chunks_obs(self, rec, failed_drive, chunk_idxs,
+                                verify=False):
         """Body of ``_reconstruct_chunks`` (split so the obs hook can
         bracket the survivor gathers + fused decode with begin/end)."""
         info = rec.info
@@ -1759,6 +1955,9 @@ class ZapRAIDArray:
                 tuple(scheme.drive_to_role(d, seq) for d, _ in picks)
             )
         oobs["stripe"] = seqs[:, None]
+        # positions whose bulk-gathered survivors failed verification fall
+        # back to the verified scalar path (alternate members / loud error)
+        bad_positions: set[int] = set()
         if scheme.mirror:
             # one gather per twin drive for payload and OOB alike
             by_drive: dict[int, list[int]] = {}
@@ -1771,8 +1970,19 @@ class ZapRAIDArray:
                     info.data_start() + twin_src[p][1] * c + np.arange(c)
                     for p in poss
                 ])
-                out[poss] = drive.read_blocks(zone, offs).reshape(-1, c, bb)
+                raw = drive.read_blocks(zone, offs)
+                out[poss] = raw.reshape(-1, c, bb)
                 oobs[poss] = drive.read_oob_blocks(zone, offs).reshape(-1, c)
+                if verify:
+                    okc = self._verify_media(drive, zone, offs, raw) \
+                        .reshape(-1, c).all(axis=1)
+                    bad_positions.update(
+                        p for p, good in zip(poss, okc) if not good
+                    )
+            for pos in sorted(bad_positions):
+                out[pos], oobs[pos] = self._reconstruct_chunk_checked(
+                    rec, failed_drive, int(chunk_idxs[pos])
+                )
             return out, oobs
         # gather survivor payload + metadata rows, one scatter-read per drive
         rows = np.empty((n, k, c * bb), np.uint8)
@@ -1789,15 +1999,28 @@ class ZapRAIDArray:
                 info.data_start() + cidx * c + np.arange(c)
                 for _, _, cidx in entries
             ])
-            blocks = drive.read_blocks(zone, offs).reshape(-1, c * bb)
+            raw = drive.read_blocks(zone, offs)
+            blocks = raw.reshape(-1, c * bb)
             roobs = drive.read_oob_blocks(zone, offs).reshape(-1, c)
+            okc = None
+            if verify:
+                okc = self._verify_media(drive, zone, offs, raw) \
+                    .reshape(-1, c).all(axis=1)
             for e, (pos, row, _) in enumerate(entries):
+                if okc is not None and not okc[e]:
+                    bad_positions.add(pos)
                 rows[pos, row] = blocks[e]
                 rows_lba[pos, row] = roobs[e]["lba"]
                 rows_ts[pos, row] = roobs[e]["ts"]
         # one fused decode per distinct surviving-role set
-        for roles in sorted(set(roles_of)):
-            poss = np.array([p for p, r in enumerate(roles_of) if r == roles])
+        role_sets = sorted({
+            r for p, r in enumerate(roles_of) if p not in bad_positions
+        })
+        for roles in role_sets:
+            poss = np.array([
+                p for p, r in enumerate(roles_of)
+                if r == roles and p not in bad_positions
+            ])
             data = codec.decode_batch_np(rows[poss], roles).reshape(
                 len(poss), k, c, bb
             )
@@ -1823,6 +2046,10 @@ class ZapRAIDArray:
                     out[pos] = par[e, role]
                     oobs["lba"][pos] = p_lba[e, role]
                     oobs["ts"][pos] = p_ts[e, role]
+        for pos in sorted(bad_positions):
+            out[pos], oobs[pos] = self._reconstruct_chunk_checked(
+                rec, failed_drive, int(chunk_idxs[pos])
+            )
         return out, oobs
 
     # ------------------------------------------------------- L2P offload plumbing
@@ -2380,7 +2607,8 @@ class ZapRAIDArray:
             # whole-zone batched reconstruction: per-drive gather reads,
             # one fused decode per surviving-role set, one ordered write
             chunks, oob_all = self._reconstruct_chunks(
-                rec, member, np.arange(n_chunks)
+                rec, member, np.arange(n_chunks),
+                verify=self.cfg.verify_reads,
             )
             meta[:] = oob_all.reshape(-1)
             new.zone_write(
@@ -2455,6 +2683,128 @@ class ZapRAIDArray:
             out["lba"] = p_lba[lost_role - scheme.k]
             out["ts"] = p_ts[lost_role - scheme.k]
         return out
+
+    # ------------------------------------------------------------------ scrub
+
+    def scrub_segment(self, seg_id: int) -> dict:
+        """Bulk-verify one sealed segment and repair every detected fault.
+
+        Per member zone the whole written extent is gathered in one read
+        and checked against the drive's checksum store (plus the UNC
+        mask).  Detected faults are repaired in place by provenance:
+
+        * header region -- regenerated from the controller's
+          ``SegmentInfo`` (the header is a replicated descriptor);
+        * footer region -- repacked from the zone's own OOB area (the
+          footer is a serialization of it);
+        * data region -- reconstructed through parity
+          (:meth:`_reconstruct_chunks` with survivor verification), which
+          raises :class:`IntegrityError` if a stripe has lost more blocks
+          than the code tolerates.
+
+        Members on failed or rebuild-pending drives are skipped -- the
+        rebuild path owns them.  Returns per-pass counters."""
+        rec = self.segments[seg_id]
+        if rec.info.state != int(SegmentState.SEALED):
+            raise ValueError(f"segment {seg_id} is not sealed")
+        if self.obs_event is not None:
+            self.obs_event("scrub.begin", seg_id=seg_id)
+        try:
+            return self._scrub_segment_obs(rec)
+        finally:
+            if self.obs_event is not None:
+                self.obs_event("scrub.end", seg_id=seg_id)
+
+    def _scrub_segment_obs(self, rec: _SegmentRecord) -> dict:
+        info = rec.info
+        c = info.chunk_blocks
+        bb = self.zns_cfg.block_bytes
+        ds = info.data_start()
+        data_end = ds + info.n_stripes * c
+        scheme = self._scheme_for(info)
+        counters = {"verified": 0, "detected": 0, "repaired": 0,
+                    "skipped_members": 0}
+        for member in range(info.n_drives):
+            drive = self.drives[info.drive_ids[member]]
+            if drive.failed or (info.seg_id, member) in self._rebuild_pending:
+                counters["skipped_members"] += 1
+                continue
+            zone = info.zone_ids[member]
+            wp = int(drive.wp[zone])
+            if wp == 0:
+                continue
+            offs = np.arange(wp, dtype=np.int64)
+            blocks = drive.read_blocks(zone, offs)
+            before = self.stats.integrity_corruptions_detected
+            ok = self._verify_media(drive, zone, offs, blocks)
+            counters["verified"] += wp
+            counters["detected"] += (
+                self.stats.integrity_corruptions_detected - before
+            )
+            self.stats.integrity_scrub_blocks += wp
+            bad = offs[~ok]
+            if bad.size == 0:
+                continue
+            hbad = bad[bad < ds]
+            if hbad.size:
+                hdr_chunk = np.zeros((c, bb), np.uint8)
+                hdr_chunk[0] = pack_header(info, bb)
+                self._repair_in_place(rec, member, hbad, hdr_chunk[hbad],
+                                      refresh_cache=False)
+                counters["repaired"] += int(hbad.size)
+            fbad = bad[bad >= data_end]
+            if fbad.size:
+                entries = drive.read_oob(zone, ds, data_end - ds)
+                foot = pack_footer(entries, bb)
+                self._repair_in_place(rec, member, fbad,
+                                      foot[fbad - data_end],
+                                      refresh_cache=False)
+                counters["repaired"] += int(fbad.size)
+            dbad = bad[(bad >= ds) & (bad < data_end)]
+            if dbad.size:
+                didx = dbad - ds
+                chunk_idxs, inv = np.unique(didx // c, return_inverse=True)
+                chunks, _ = self._reconstruct_chunks(
+                    rec, member, chunk_idxs, verify=True
+                )
+                good = chunks[inv, didx % c]
+                # cache keys only exist for data-role blocks (a parity
+                # block's OOB lba is erasure-coded metadata, not a key);
+                # mirror twins both carry real keys
+                data_role = np.empty(chunk_idxs.size, dtype=bool)
+                for i, ci in enumerate(chunk_idxs):
+                    seq, _ = self._chunk_members(rec, member, int(ci))
+                    role = scheme.drive_to_role(member, seq)
+                    data_role[i] = scheme.mirror or role < scheme.k
+                is_data = data_role[inv]
+                for sel, refresh in ((is_data, True), (~is_data, False)):
+                    if sel.any():
+                        self._repair_in_place(
+                            rec, member, dbad[sel], good[sel],
+                            refresh_cache=refresh,
+                        )
+                counters["repaired"] += int(dbad.size)
+        return counters
+
+    def scrub_once(self) -> dict:
+        """One whole-array scrub pass over every sealed segment.
+
+        The timed pipeline's paced actor walks segments one per tick
+        instead (:meth:`HandlerPipeline.schedule_scrub`); this synchronous
+        form is for tests and crash-free tooling."""
+        self._sync_pending()
+        totals = {"verified": 0, "detected": 0, "repaired": 0,
+                  "skipped_members": 0, "segments": 0}
+        for seg_id in sorted(self.segments):
+            if self.segments[seg_id].info.state != int(SegmentState.SEALED):
+                continue
+            r = self.scrub_segment(seg_id)
+            for key in ("verified", "detected", "repaired",
+                        "skipped_members"):
+                totals[key] += r[key]
+            totals["segments"] += 1
+        self.stats.integrity_scrub_passes += 1
+        return totals
 
     # ------------------------------------------------------------ crash + misc
 

@@ -202,6 +202,7 @@ class HandlerPipeline:
                 "degraded": "degraded.decode",
                 "commit_narrow": "stripe.commit_narrow",
                 "rewiden": "rebuild.rewiden",
+                "scrub": "scrub.segment",
             }.get(key, key)
             tr.span("array", span_name, t0, max(t0, eng.io_watermark, eng.now),
                     cat="background", **args)
@@ -465,12 +466,13 @@ class HandlerPipeline:
     def schedule_drive_failure(self, drive_idx: int, at: float) -> None:
         self.engine.at(at, self.array.fail_drive, drive_idx)
 
-    def attach_faults(self, plan) -> "Any":
+    def attach_faults(self, plan, *, seed: int = 0) -> "Any":
         """Arm a :class:`repro.sim.faults.FaultPlan` on this pipeline's
         engine; returns the armed :class:`~repro.sim.faults.FaultInjector`
-        (its ``log`` records every fired event)."""
+        (its ``log`` records every fired event).  ``seed`` drives the
+        injector's fire-time victim sampling for media faults."""
         from repro.sim.faults import FaultInjector
-        return FaultInjector(self, plan).arm()
+        return FaultInjector(self, plan, seed=seed).arm()
 
     def schedule_rebuild(
         self, drive_idx: int, at: float, interval_us: float = 0.0
@@ -595,6 +597,76 @@ class HandlerPipeline:
         if remaining > 1:
             eng.at(eng.now + interval_us, self._ev_gc_tick,
                    interval_us, remaining - 1, watermark)
+
+    def schedule_scrub(
+        self,
+        at: float,
+        interval_us: float,
+        n_passes: int = 1,
+        yield_to_foreground: bool = True,
+    ) -> None:
+        """Paced background-scrub actor: walk every sealed segment, one per
+        ``interval_us`` tick, bulk-verifying its zones against the checksum
+        store and repairing detected faults through parity
+        (:meth:`ZapRAIDArray.scrub_segment`).  Each step's gathers and
+        repair writes book device time on the timed drives, so scrub
+        traffic contends with foreground I/O the same way GC and rebuild
+        do; with ``yield_to_foreground`` a tick that finds requests in
+        flight defers its segment to the next tick instead of stealing
+        device time from them.  ``notes["scrub_device_us"]`` totals the
+        actor's device traffic.  ``n_passes`` whole-array passes run
+        back to back (each re-snapshots the sealed set)."""
+        self.engine.at(at, self._ev_scrub_start,
+                       interval_us, n_passes, yield_to_foreground)
+
+    def _ev_scrub_start(
+        self, interval_us: float, remaining: int, yield_fg: bool
+    ) -> None:
+        from repro.core.segment import SegmentState
+        arr = self.array
+        arr._sync_pending()
+        sealed = sorted(
+            sid for sid, rec in arr.segments.items()
+            if rec.info.state == int(SegmentState.SEALED)
+        )
+        if sealed:
+            self._ev_scrub_step(sealed, 0, interval_us, remaining, yield_fg)
+        else:
+            arr.stats.integrity_scrub_passes += 1
+            if remaining > 1:
+                self.engine.at(self.engine.now + interval_us,
+                               self._ev_scrub_start,
+                               interval_us, remaining - 1, yield_fg)
+
+    def _ev_scrub_step(
+        self, sealed: list, i: int, interval_us: float, remaining: int,
+        yield_fg: bool,
+    ) -> None:
+        from repro.core.segment import SegmentState
+        arr = self.array
+        eng = self.engine
+        if yield_fg and self._open_reqs > 0:
+            # foreground requests in flight: give them the device and try
+            # this segment again next tick
+            eng.at(eng.now + interval_us, self._ev_scrub_step,
+                   sealed, i, interval_us, remaining, yield_fg)
+            return
+        seg_id = sealed[i]
+        rec = arr.segments.get(seg_id)
+        if rec is not None and rec.info.state == int(SegmentState.SEALED):
+            mark = eng.mark_io()
+            arr.scrub_segment(seg_id)
+            self.counters["cleaning"] += 1
+            self.recorder.note("scrub_device_us",
+                               max(0.0, eng.io_watermark - mark))
+        if i + 1 < len(sealed):
+            eng.at(eng.now + interval_us, self._ev_scrub_step,
+                   sealed, i + 1, interval_us, remaining, yield_fg)
+        else:
+            arr.stats.integrity_scrub_passes += 1
+            if remaining > 1:
+                eng.at(eng.now + interval_us, self._ev_scrub_start,
+                       interval_us, remaining - 1, yield_fg)
 
     # -- stages (synchronous mode) ------------------------------------------
 

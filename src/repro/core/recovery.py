@@ -42,6 +42,7 @@ from repro.core.array import ZapRaidConfig, ZapRAIDArray, _OpenSegment, _Segment
 from repro.core.group_layout import CompactStripeTable
 from repro.core.l2p import NO_PBA, pack_pba, pack_pba_many, unpack_pba, unpack_pba_many
 from repro.core.segment import (
+    FooterError,
     SegmentInfo,
     SegmentState,
     header_candidates,
@@ -49,6 +50,7 @@ from repro.core.segment import (
     unpack_footer,
     unpack_header,
 )
+from repro.integrity.checksum import crc32c_many
 from repro.core.zns import (
     INVALID_LBA,
     OOB_DTYPE,
@@ -115,7 +117,11 @@ def _note_segment(found, info, drives, zns_cfg) -> None:
 
 
 def _scan_headers(drives, zns_cfg, stats) -> dict[int, _FoundSegment]:
-    """Per-zone header reads + unpack (the scalar baseline)."""
+    """Per-zone header reads + unpack (the scalar baseline).
+
+    A header copy whose media checksum mismatches (or that reads UNC) is
+    skipped, so a rotted copy loses to an intact replica on another
+    member instead of installing garbage geometry."""
     found: dict[int, _FoundSegment] = {}
     for d in drives:
         if d.failed:
@@ -123,8 +129,15 @@ def _scan_headers(drives, zns_cfg, stats) -> dict[int, _FoundSegment]:
         for z in range(zns_cfg.n_zones):
             if d.state[z] == ZoneState.EMPTY or d.wp[z] == 0:
                 continue
-            info = unpack_header(d.read(z, 0, 1)[0])
+            block = d.read(z, 0, 1)
             stats.recovery_blocks_read += 1
+            zero = np.zeros(1, np.int64)
+            if (
+                bool(d.unc_blocks(z, zero)[0])
+                or int(d.crc_blocks(z, zero)[0]) != int(crc32c_many(block)[0])
+            ):
+                continue  # rotted copy: an intact replica must win
+            info = unpack_header(block[0])
             if info is None or info.seg_id in found:
                 continue
             _note_segment(found, info, drives, zns_cfg)
@@ -132,7 +145,10 @@ def _scan_headers(drives, zns_cfg, stats) -> dict[int, _FoundSegment]:
 
 
 def _scan_headers_batched(drives, zns_cfg, stats) -> dict[int, _FoundSegment]:
-    """One cross-zone header gather per drive + vectorized magic pre-filter."""
+    """One cross-zone header gather per drive + vectorized magic pre-filter.
+
+    Checksum validation is part of the same bulk pass: copies whose media
+    CRC mismatches or that read UNC are dropped before unpacking."""
     found: dict[int, _FoundSegment] = {}
     for d in drives:
         if d.failed:
@@ -140,9 +156,14 @@ def _scan_headers_batched(drives, zns_cfg, stats) -> dict[int, _FoundSegment]:
         zs = np.flatnonzero((np.asarray(d.state) != ZoneState.EMPTY) & (d.wp > 0))
         if zs.size == 0:
             continue
-        blocks = d.read_scattered(zs, np.zeros(zs.size, np.int64))
+        zeros = np.zeros(zs.size, np.int64)
+        blocks = d.read_scattered(zs, zeros)
         stats.recovery_blocks_read += int(zs.size)
-        for i in np.flatnonzero(header_candidates(blocks)):
+        intact = (
+            (crc32c_many(blocks) == d.crc_scattered(zs, zeros))
+            & ~d.unc_scattered(zs, zeros)
+        )
+        for i in np.flatnonzero(header_candidates(blocks) & intact):
             info = unpack_header(blocks[i])
             if info is None or info.seg_id in found:
                 continue
@@ -214,16 +235,40 @@ def _scan_stripes_batched(fs: _FoundSegment, drives, stats) -> None:
 
 
 def _read_sealed_meta(fs: _FoundSegment, drives, zns_cfg, stats) -> None:
-    """Fast path: replay footers instead of scanning the whole OOB area."""
+    """Fast path: replay footers instead of scanning the whole OOB area.
+
+    Each member's footer is validated before its mappings are trusted:
+    the media checksum store first, then the in-band footer CRC
+    (``unpack_footer(strict=True)``).  A member whose footer is rotted,
+    torn, or UNC falls back to that zone's OOB-area scan -- same
+    entries, slower path -- rather than installing garbage mappings."""
     info = fs.info
     c = info.chunk_blocks
     n_entries = info.n_stripes * c
     all_seqs: list[np.ndarray] = []
     for member in fs.present():
         z = info.zone_ids[member]
-        foot = drives[info.drive_ids[member]].read(z, fs.data_end(), fs.footer_blocks)
+        d = drives[info.drive_ids[member]]
+        foot = d.read(z, fs.data_end(), fs.footer_blocks)
         stats.recovery_blocks_read += foot.shape[0]
-        entries = unpack_footer(foot, n_entries, zns_cfg.block_bytes)
+        offs = fs.data_end() + np.arange(fs.footer_blocks, dtype=np.int64)
+        try:
+            if (
+                d.unc_blocks(z, offs).any()
+                or (crc32c_many(foot) != d.crc_blocks(z, offs)).any()
+            ):
+                raise FooterError(
+                    f"segment {info.seg_id} member {member}: footer fails "
+                    "the media checksum"
+                )
+            entries = unpack_footer(
+                foot, n_entries, zns_cfg.block_bytes, strict=True
+            )
+        except FooterError:
+            # rotted footer: the OOB area holds the same per-block
+            # metadata (the footer is a serialization of it)
+            entries = d.read_oob(z, info.data_start(), n_entries).copy()
+            stats.recovery_blocks_read += n_entries
         rows = entries.reshape(info.n_stripes, c)
         fs.meta[member] = rows
         all_seqs.append(rows["stripe"][:, 0].astype(np.int64))

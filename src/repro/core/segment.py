@@ -23,9 +23,17 @@ import struct
 import numpy as np
 
 from repro.core.zns import OOB_DTYPE, OOB_ENTRY_BYTES
+from repro.integrity.checksum import CRC_BYTES, crc32c_many, crc32c_pack
 
 HEADER_MAGIC = b"ZAPR"
 HEADER_VERSION = 3
+
+
+class FooterError(ValueError):
+    """Loud failure: a zone footer is truncated or fails its checksum.
+
+    Raised by :func:`unpack_footer` instead of ever returning garbage
+    mappings; recovery catches it and falls back to the OOB-area scan."""
 
 
 class SegmentState(enum.IntEnum):
@@ -41,6 +49,21 @@ class SegmentClass(enum.IntEnum):
 
 def footer_entries_per_block(block_bytes: int) -> int:
     return block_bytes // OOB_ENTRY_BYTES  # 4096 // 20 = 204
+
+
+def footer_slack_bytes(block_bytes: int) -> int:
+    """Bytes left in a footer block after ``epb`` packed entries (16 at
+    4 KiB blocks) -- where the in-band footer checksum lives."""
+    return block_bytes - footer_entries_per_block(block_bytes) * OOB_ENTRY_BYTES
+
+
+def footer_has_crc(block_bytes: int) -> bool:
+    """True when the geometry leaves room for the in-band footer CRC32C.
+
+    Slack-less geometries (e.g. 80/100-byte test blocks pack entries
+    exactly) skip the in-band checksum; their footers are still covered
+    by the drive's per-block checksum store."""
+    return footer_slack_bytes(block_bytes) >= CRC_BYTES
 
 
 def solve_stripes_per_segment(zone_cap_blocks: int, chunk_blocks: int, block_bytes: int) -> tuple[int, int]:
@@ -168,20 +191,70 @@ def unpack_header(block: np.ndarray) -> SegmentInfo | None:
 
 
 def pack_footer(oob_entries: np.ndarray, block_bytes: int) -> np.ndarray:
-    """Serialize the data region's OOB entries of one zone into footer blocks."""
+    """Serialize the data region's OOB entries of one zone into footer blocks.
+
+    When the geometry has slack (:func:`footer_has_crc`) each footer block
+    carries a CRC32C of its packed entry area in the first 4 slack bytes,
+    so a recovery scan can tell an intact footer from a rotted one without
+    trusting the mappings it is about to install."""
     epb = footer_entries_per_block(block_bytes)
     n = oob_entries.shape[0]
     n_blocks = -(-n // epb)
     raw = np.zeros(n_blocks * epb, dtype=OOB_DTYPE)
     raw[:n] = oob_entries
-    flat = raw.view(np.uint8).reshape(n_blocks, epb * OOB_ENTRY_BYTES)
+    entry_bytes = epb * OOB_ENTRY_BYTES
+    flat = raw.view(np.uint8).reshape(n_blocks, entry_bytes)
     out = np.zeros((n_blocks, block_bytes), dtype=np.uint8)
-    out[:, : epb * OOB_ENTRY_BYTES] = flat
+    out[:, :entry_bytes] = flat
+    if footer_has_crc(block_bytes):
+        out[:, entry_bytes : entry_bytes + CRC_BYTES] = crc32c_pack(
+            crc32c_many(flat)
+        )
     return out
 
 
-def unpack_footer(blocks: np.ndarray, n_entries: int, block_bytes: int) -> np.ndarray:
+def footer_crc_ok(blocks: np.ndarray, block_bytes: int) -> np.ndarray:
+    """Per-block validity mask for footer blocks.
+
+    All-True on slack-less geometries (nothing to check in-band)."""
+    n_blocks = blocks.shape[0]
+    if not footer_has_crc(block_bytes):
+        return np.ones(n_blocks, dtype=bool)
+    entry_bytes = footer_entries_per_block(block_bytes) * OOB_ENTRY_BYTES
+    stored = np.ascontiguousarray(
+        blocks[:, entry_bytes : entry_bytes + CRC_BYTES]
+    ).view("<u4").reshape(n_blocks)
+    return crc32c_many(np.ascontiguousarray(blocks[:, :entry_bytes])) == stored
+
+
+def unpack_footer(
+    blocks: np.ndarray, n_entries: int, block_bytes: int, *, strict: bool = False
+) -> np.ndarray:
+    """Deserialize footer blocks back into OOB entries.
+
+    Raises :class:`FooterError` when the blocks cannot possibly hold
+    ``n_entries`` (truncated footer) and, with ``strict``, when any
+    block's in-band checksum mismatches -- never silently returns short
+    or corrupt mappings."""
     epb = footer_entries_per_block(block_bytes)
-    flat = blocks[:, : epb * OOB_ENTRY_BYTES].reshape(-1)
+    blocks = np.asarray(blocks, dtype=np.uint8).reshape(blocks.shape[0], -1)
+    if blocks.shape[1] < epb * OOB_ENTRY_BYTES:
+        raise FooterError(
+            f"footer blocks of {blocks.shape[1]} bytes cannot hold "
+            f"{epb} entries (need {epb * OOB_ENTRY_BYTES})"
+        )
+    if blocks.shape[0] * epb < n_entries:
+        raise FooterError(
+            f"truncated footer: {blocks.shape[0]} blocks hold at most "
+            f"{blocks.shape[0] * epb} entries, need {n_entries}"
+        )
+    if strict:
+        ok = footer_crc_ok(blocks[:, :block_bytes], block_bytes)
+        if not ok.all():
+            bad = np.flatnonzero(~ok)
+            raise FooterError(
+                f"footer checksum mismatch in block(s) {bad.tolist()}"
+            )
+    flat = np.ascontiguousarray(blocks[:, : epb * OOB_ENTRY_BYTES]).reshape(-1)
     entries = flat.view(OOB_DTYPE)[:n_entries]
     return entries.copy()

@@ -18,6 +18,17 @@ Crash injection: the array owns a shared ``CrashBudget``; every block commit
 decrements it, and when it hits zero the device stops persisting (simulating
 power loss mid-group).  Completed commits stay durable, exactly like NAND.
 
+Integrity (PR 10): every committed block carries a CRC32C in a per-block
+checksum store (``self.crc``, the simulated DIF/OOB checksum lane).  The
+store always reflects what the *host* wrote -- media faults
+(:meth:`corrupt_bit_rot`, :meth:`corrupt_torn_write`,
+:meth:`corrupt_misdirected_write`, :meth:`mark_unreadable`) perturb the
+data plane or the UNC mask only, so a verify pass detects them as
+checksum mismatches / unreadable sectors.  Reads keep their historical
+non-raising contract; verification layers (``array`` verify-on-read, the
+scrub actor, recovery scans) consult :meth:`crc_blocks` /
+:meth:`unc_blocks` and repair in place via :meth:`repair_blocks`.
+
 The data plane (block payloads) lives in numpy; parity math over it runs
 through the JAX/Pallas kernels in ``repro.kernels``.
 """
@@ -28,6 +39,8 @@ import enum
 from typing import Optional
 
 import numpy as np
+
+from repro.integrity.checksum import crc32c_many
 
 OOB_DTYPE = np.dtype([("lba", "<u8"), ("ts", "<u8"), ("stripe", "<u4")])
 OOB_ENTRY_BYTES = 20  # paper §3.1: 8 (LBA) + 8 (timestamp) + 4 (stripe id)
@@ -47,6 +60,15 @@ class DeviceCrashed(Exception):
 
 class DriveFailed(Exception):
     """Raised when reading a failed drive."""
+
+
+class UncorrectableError(Exception):
+    """UNC-style media error: a block is flagged unreadable.
+
+    Raised by the *verifying* read layers (``read_verified`` here, the
+    array's verify-on-read / scrub paths) when a gather touches a sector
+    the device can no longer return -- the host must reconstruct it from
+    parity or surface the loss loudly."""
 
 
 class TooManyOpenZones(Exception):
@@ -97,12 +119,17 @@ class SimZnsDrive:
         )
         self.oob = np.zeros((cfg.n_zones, cfg.zone_cap_blocks), dtype=OOB_DTYPE)
         self.oob["lba"] = INVALID_LBA
+        # Per-block CRC32C store (simulated DIF lane) + unreadable mask.
+        self.crc = np.zeros((cfg.n_zones, cfg.zone_cap_blocks), dtype=np.uint32)
+        self.unc = np.zeros((cfg.n_zones, cfg.zone_cap_blocks), dtype=bool)
         self.wp = np.zeros(cfg.n_zones, dtype=np.int64)
         self.state = np.full(cfg.n_zones, ZoneState.EMPTY, dtype=np.int32)
         self.failed = False
         # Device counters (used by benchmarks / write-amplification accounting)
         self.blocks_written = 0
         self.zone_resets = 0
+        self.media_faults = 0      # injected sub-drive faults (all kinds)
+        self.blocks_repaired = 0   # in-place repairs via repair_blocks
 
     # -- state management ---------------------------------------------------
 
@@ -131,6 +158,8 @@ class SimZnsDrive:
         self.data[zone] = 0
         self.oob[zone] = np.zeros((), dtype=OOB_DTYPE)
         self.oob[zone]["lba"] = INVALID_LBA
+        self.crc[zone] = 0
+        self.unc[zone] = False
         self.zone_resets += 1
 
     def finish_zone(self, zone: int) -> None:
@@ -139,7 +168,7 @@ class SimZnsDrive:
 
     # -- writes -------------------------------------------------------------
 
-    def _commit_block(self, zone: int, block: np.ndarray, oob_entry) -> bool:
+    def _commit_block(self, zone: int, block: np.ndarray, oob_entry, crc=None) -> bool:
         """Persist one block at the write pointer.  False => power lost."""
         if not self.budget.consume():
             return False
@@ -147,36 +176,51 @@ class SimZnsDrive:
         assert off < self.cfg.zone_cap_blocks, (zone, off)
         self.data[zone, off] = block
         self.oob[zone, off] = oob_entry
+        self.crc[zone, off] = crc if crc is not None \
+            else crc32c_many(block[None])[0]
+        self.unc[zone, off] = False
         self.wp[zone] = off + 1
         self.blocks_written += 1
         if self.wp[zone] == self.cfg.zone_cap_blocks:
             self.state[zone] = ZoneState.FULL
         return True
 
-    def _commit_blocks(self, zone: int, blocks: np.ndarray, oobs: np.ndarray) -> None:
+    def _commit_blocks(
+        self, zone: int, blocks: np.ndarray, oobs: np.ndarray, crcs=None
+    ) -> None:
         """Persist a contiguous run of blocks at the write pointer.
 
         When no crash budget is armed the whole run lands in two slice
         assignments (the hot path for group commits); with a budget armed we
         fall back to per-block commits so power loss cuts at exact block
         granularity, like NAND.
+
+        ``crcs`` lets the caller pass checksums it already computed on the
+        packed arenas (the group committer does one vectorized pass over
+        the whole codeword); otherwise they are computed here.
         """
         n = blocks.shape[0]
+        if crcs is None:
+            crcs = crc32c_many(blocks)
         if self.budget.remaining is None:
             off = int(self.wp[zone])
             assert off + n <= self.cfg.zone_cap_blocks, (zone, off, n)
             self.data[zone, off : off + n] = blocks
             self.oob[zone, off : off + n] = oobs
+            self.crc[zone, off : off + n] = crcs
+            self.unc[zone, off : off + n] = False
             self.wp[zone] = off + n
             self.blocks_written += n
             if self.wp[zone] == self.cfg.zone_cap_blocks:
                 self.state[zone] = ZoneState.FULL
             return
         for i in range(n):
-            if not self._commit_block(zone, blocks[i], oobs[i]):
+            if not self._commit_block(zone, blocks[i], oobs[i], crcs[i]):
                 raise DeviceCrashed(f"crash on drive={self.drive_id}")
 
-    def zone_write(self, zone: int, offset: int, blocks: np.ndarray, oobs: np.ndarray) -> None:
+    def zone_write(
+        self, zone: int, offset: int, blocks: np.ndarray, oobs: np.ndarray, crcs=None
+    ) -> None:
         """Ordered write: ``offset`` must equal the zone write pointer."""
         self._check_alive()
         if offset != int(self.wp[zone]):
@@ -184,13 +228,15 @@ class SimZnsDrive:
                 f"zone_write offset {offset} != wp {int(self.wp[zone])} (zone {zone})"
             )
         self._open_zone(zone)
-        self._commit_blocks(zone, blocks, oobs)
+        self._commit_blocks(zone, blocks, oobs, crcs)
 
     def zone_append_begin(self, zone: int) -> None:
         self._check_alive()
         self._open_zone(zone)
 
-    def zone_append_commit(self, zone: int, blocks: np.ndarray, oobs: np.ndarray) -> int:
+    def zone_append_commit(
+        self, zone: int, blocks: np.ndarray, oobs: np.ndarray, crcs=None
+    ) -> int:
         """Commit one append command (a contiguous chunk); returns its offset.
 
         The *caller* (the array's group committer) is responsible for issuing
@@ -200,11 +246,11 @@ class SimZnsDrive:
         self._check_alive()
         self._open_zone(zone)
         off = int(self.wp[zone])
-        self._commit_blocks(zone, blocks, oobs)
+        self._commit_blocks(zone, blocks, oobs, crcs)
         return off
 
     def zone_append_commit_many(
-        self, zone: int, chunks: np.ndarray, oobs: np.ndarray
+        self, zone: int, chunks: np.ndarray, oobs: np.ndarray, crcs=None
     ) -> np.ndarray:
         """Commit a run of append commands to one zone in the given order.
 
@@ -222,7 +268,9 @@ class SimZnsDrive:
         n_cmds, c, bb = chunks.shape
         off0 = int(self.wp[zone])
         self._commit_blocks(zone, chunks.reshape(n_cmds * c, bb),
-                            oobs.reshape(n_cmds * c))
+                            oobs.reshape(n_cmds * c),
+                            None if crcs is None else
+                            np.asarray(crcs).reshape(n_cmds * c))
         return off0 + c * np.arange(n_cmds, dtype=np.int64)
 
     # -- reads --------------------------------------------------------------
@@ -255,6 +303,104 @@ class SimZnsDrive:
         self._check_alive()
         return self.oob[zone, np.asarray(offsets, dtype=np.int64)]
 
+    # -- integrity: checksum store + UNC mask --------------------------------
+
+    def crc_blocks(self, zone: int, offsets: np.ndarray) -> np.ndarray:
+        """Gather stored checksums of one zone's blocks (host DIF lane)."""
+        self._check_alive()
+        return self.crc[zone, np.asarray(offsets, dtype=np.int64)]
+
+    def crc_scattered(self, zones: np.ndarray, offsets: np.ndarray) -> np.ndarray:
+        self._check_alive()
+        return self.crc[
+            np.asarray(zones, dtype=np.int64), np.asarray(offsets, dtype=np.int64)
+        ]
+
+    def unc_blocks(self, zone: int, offsets: np.ndarray) -> np.ndarray:
+        """Unreadable-sector mask for a gather (True => UNC on read)."""
+        self._check_alive()
+        return self.unc[zone, np.asarray(offsets, dtype=np.int64)]
+
+    def unc_scattered(self, zones: np.ndarray, offsets: np.ndarray) -> np.ndarray:
+        self._check_alive()
+        return self.unc[
+            np.asarray(zones, dtype=np.int64), np.asarray(offsets, dtype=np.int64)
+        ]
+
+    def read_verified(self, zone: int, offset: int, n_blocks: int) -> np.ndarray:
+        """Checked contiguous read: raises :class:`UncorrectableError` on a
+        UNC sector instead of returning whatever is on the media."""
+        self._check_alive()
+        if self.unc[zone, offset : offset + n_blocks].any():
+            raise UncorrectableError(
+                f"drive {self.drive_id}: UNC in zone {zone} "
+                f"[{offset}, {offset + n_blocks})"
+            )
+        return self.data[zone, offset : offset + n_blocks]
+
+    def repair_blocks(self, zone: int, offsets: np.ndarray, blocks: np.ndarray) -> None:
+        """In-place media repair: rewrite blocks that parity reconstructed.
+
+        Unlike a log append this does *not* move the write pointer or touch
+        the OOB area -- the logical location (L2P, CST) of the block is
+        unchanged; only the rotted payload is replaced, its checksum
+        recomputed, and any UNC flag cleared (a successful rewrite
+        reallocates the sector, like a NAND read-retry + rewrite)."""
+        self._check_alive()
+        offs = np.asarray(offsets, dtype=np.int64)
+        blocks = np.asarray(blocks, dtype=np.uint8).reshape(
+            offs.size, self.cfg.block_bytes
+        )
+        self.data[zone, offs] = blocks
+        self.crc[zone, offs] = crc32c_many(blocks)
+        self.unc[zone, offs] = False
+        self.blocks_repaired += int(offs.size)
+
+    def written_mask(self) -> np.ndarray:
+        """(n_zones, cap) bool: True where a block has been committed."""
+        return (
+            np.arange(self.cfg.zone_cap_blocks, dtype=np.int64)[None, :]
+            < self.wp[:, None]
+        )
+
+    # -- integrity: media-fault application ----------------------------------
+    #
+    # All fault hooks perturb the data plane / UNC mask only -- never the
+    # checksum store, which models the host-written DIF lane.  That is what
+    # makes every injected fault *detectable*: a verify pass sees a stored
+    # checksum that no longer matches the media (or an UNC flag).
+
+    def corrupt_bit_rot(self, zone: int, off: int, byte: int = 0, bit: int = 0) -> None:
+        """Flip one bit of a committed block (retention/read-disturb rot)."""
+        self.data[zone, off, byte] ^= np.uint8(1 << bit)
+        self.media_faults += 1
+
+    def corrupt_torn_write(self, zone: int, n_blocks: int) -> int:
+        """Lose the tail of the most recent commit to this zone: the last
+        ``n_blocks`` before the write pointer revert to erased (zeros) while
+        wp/OOB/checksums still reflect the intended write -- the classic
+        torn/partial-write fault.  Returns how many blocks were torn."""
+        end = int(self.wp[zone])
+        lo = max(0, end - n_blocks)
+        if end > lo:
+            self.data[zone, lo:end] = 0
+            self.media_faults += end - lo
+        return end - lo
+
+    def corrupt_misdirected_write(
+        self, zone: int, off: int, src_zone: int, src_off: int
+    ) -> None:
+        """A write aimed elsewhere landed here: the victim block's media is
+        overwritten with another block's payload (its stored checksum now
+        mismatches), modeling a firmware misdirected write."""
+        self.data[zone, off] = self.data[src_zone, src_off]
+        self.media_faults += 1
+
+    def mark_unreadable(self, zone: int, off: int) -> None:
+        """Latent sector error: reads of this block return UNC."""
+        self.unc[zone, off] = True
+        self.media_faults += 1
+
     # -- failure ------------------------------------------------------------
 
     def fail(self) -> None:
@@ -271,6 +417,8 @@ class SimZnsDrive:
         self.data[:] = 0
         self.oob[:] = np.zeros((), dtype=OOB_DTYPE)
         self.oob["lba"] = INVALID_LBA
+        self.crc[:] = 0
+        self.unc[:] = False
         self.wp[:] = 0
         self.state[:] = ZoneState.EMPTY
         self.failed = False

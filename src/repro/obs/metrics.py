@@ -210,6 +210,24 @@ def standard_collector(pipe, svc=None) -> Callable[[MetricsRegistry], None]:
         reg.counters["array/gc_runs"] = float(arr.stats.gc_runs)
         reg.counters["array/gc_blocks_moved"] = float(arr.stats.gc_blocks_moved)
         reg.set("array/rebuild_pending_zones", len(arr._rebuild_pending))
+        # end-to-end integrity: detections/repairs are monotone counters,
+        # the media-fault total comes from the drives' own hooks so a CI
+        # gate can assert injected == detected after a scrub pass
+        reg.counters["integrity/corruptions_detected"] = float(
+            arr.stats.integrity_corruptions_detected)
+        reg.counters["integrity/unreadable_hits"] = float(
+            arr.stats.integrity_unreadable_hits)
+        reg.counters["integrity/blocks_repaired"] = float(
+            arr.stats.integrity_blocks_repaired)
+        reg.counters["integrity/scrub_passes"] = float(
+            arr.stats.integrity_scrub_passes)
+        reg.counters["integrity/scrub_blocks"] = float(
+            arr.stats.integrity_scrub_blocks)
+        # max-folded like busy_us: a drive replacement mid-run must not
+        # make the fleet-wide total step backwards
+        reg.counters["integrity/media_faults_injected"] = max(
+            float(sum(d.media_faults for d in arr.drives)),
+            reg.counters.get("integrity/media_faults_injected", 0.0))
         # 1.0 while any member drive is failed: SLO monitors and dashboards
         # can separate degraded-width commits from healthy-path latency
         reg.set("array/degraded_mode",

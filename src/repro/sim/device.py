@@ -189,13 +189,13 @@ class TimedDrive(SimZnsDrive):
 
     # -- timed command surface (functional op + booking) ----------------------
 
-    def zone_write(self, zone: int, offset: int, blocks, oobs) -> None:
-        super().zone_write(zone, offset, blocks, oobs)
+    def zone_write(self, zone: int, offset: int, blocks, oobs, crcs=None) -> None:
+        super().zone_write(zone, offset, blocks, oobs, crcs)
         done = self.book_zone_write(zone, blocks.shape[0], self.engine.now)
         self.chunk_done[(zone, offset)] = done
 
-    def zone_append_commit(self, zone: int, blocks, oobs) -> int:
-        off = super().zone_append_commit(zone, blocks, oobs)
+    def zone_append_commit(self, zone: int, blocks, oobs, crcs=None) -> int:
+        off = super().zone_append_commit(zone, blocks, oobs, crcs)
         planned = self._planned.get(zone)
         if planned:
             done = planned.popleft()
@@ -205,8 +205,8 @@ class TimedDrive(SimZnsDrive):
         self.chunk_done[(zone, off)] = done
         return off
 
-    def zone_append_commit_many(self, zone: int, chunks, oobs) -> np.ndarray:
-        offs = super().zone_append_commit_many(zone, chunks, oobs)
+    def zone_append_commit_many(self, zone: int, chunks, oobs, crcs=None) -> np.ndarray:
+        offs = super().zone_append_commit_many(zone, chunks, oobs, crcs)
         planned = self._planned.get(zone)
         c = chunks.shape[1]
         for off in offs:
@@ -234,6 +234,12 @@ class TimedDrive(SimZnsDrive):
         out = super().read_scattered(zones, offsets)
         self.book_read(len(offsets), self.engine.now)
         return out
+
+    def repair_blocks(self, zone: int, offsets, blocks) -> None:
+        # an in-place repair is a write command on the zone's queue: scrub
+        # and verify-on-read repairs contend with foreground traffic
+        super().repair_blocks(zone, offsets, blocks)
+        self.book_zone_write(zone, len(offsets), self.engine.now)
 
     def replace(self) -> None:
         super().replace()
